@@ -1,0 +1,38 @@
+"""Per-architecture reduced-config step timing on CPU — regression guard
+for the model stack (not a TPU perf number; those live in the roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def run():
+    from repro import optim
+    from repro.configs import get_config, list_archs
+    from repro.configs.base import ShapeCell
+    from repro.data import pipeline_for
+    from repro.models import build_model
+
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch, reduced=True)
+        cell = ShapeCell("b", 32, 2, "train")
+        pipe = pipeline_for(cfg, cell)
+        model = build_model(cfg)
+        oc = optim.OptConfig(warmup_steps=1, decay_steps=10)
+        params = model.init(jax.random.PRNGKey(0))
+        state = optim.init(oc, params)
+        step = jax.jit(optim.make_train_step(model, oc))
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+        params, state, m = step(params, state, batch)      # compile
+        t0 = time.perf_counter()
+        iters = 3
+        for i in range(iters):
+            params, state, m = step(params, state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append((f"arch_step.{arch}", us,
+                     f"loss={float(m['loss']):.3f}"))
+    return rows

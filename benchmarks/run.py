@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract). Modules:
+  fig6a_apps        paper Fig. 6a  — apps native vs virtualized
+  fig6b_breakdown   paper Fig. 6b  — virtualization overhead breakdown
+  micro             paper §IV.E    — transfer BW / device mem BW / issue rate
+  criteria_report   paper §III-A   — the five criteria, measured
+  roofline          scale deliverable — per-cell roofline terms (from the
+                    dry-run artifacts; run launch/dryrun.py first)
+  arch_step         reduced-config per-arch step timing (regression guard)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    os.chdir(os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import (arch_step, criteria_report, fig6a_apps,
+                            fig6b_breakdown, micro, roofline)
+    modules = [("fig6a", fig6a_apps), ("fig6b", fig6b_breakdown),
+               ("micro", micro), ("criteria", criteria_report),
+               ("roofline", roofline), ("arch_step", arch_step)]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.2f},{str(derived).replace(',', ';')}")
+        except Exception as e:   # noqa: BLE001
+            failures += 1
+            traceback.print_exc(limit=3, file=sys.stderr)
+            print(f"{name}.ERROR,0,{type(e).__name__}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

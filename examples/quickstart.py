@@ -1,0 +1,71 @@
+"""Quickstart: the paper's scenario in 60 lines.
+
+1. Build an LM (assigned-architecture config, reduced dims for CPU).
+2. Train a few steps natively.
+3. Create a vPOD VMM, admit a tenant (vFPGA analogue), *reprogram* its
+   slice with the same train step, and run the same steps virtualized —
+   the code is identical (fidelity), the control plane is mediated.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.core import VMM, ProgramRequest, report
+from repro.data import pipeline_for
+from repro.models import build_model
+
+ARCH = "qwen1.5-0.5b"
+STEPS = 10
+
+cfg = get_config(ARCH, reduced=True)
+cell = ShapeCell("quickstart", seq_len=64, global_batch=4, kind="train")
+model = build_model(cfg)
+oc = optim.OptConfig(warmup_steps=2, decay_steps=STEPS)
+pipe = pipeline_for(cfg, cell)
+
+params = model.init(jax.random.PRNGKey(0))
+opt_state = optim.init(oc, params)
+step_fn = jax.jit(optim.make_train_step(model, oc))
+
+# --- native -----------------------------------------------------------
+t0 = time.perf_counter()
+for i in range(STEPS):
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+    params, opt_state, m = step_fn(params, opt_state, batch)
+native_s = time.perf_counter() - t0
+print(f"[native]      {STEPS} steps, loss={float(m['loss']):.4f}, "
+      f"{native_s:.2f}s")
+
+# --- virtualized ---------------------------------------------------------
+from jax.sharding import Mesh                                 # noqa: E402
+devs = np.array(jax.devices()[:1]).reshape(1, 1)
+vmm = VMM(Mesh(devs, ("data", "model")), policy="hybrid",
+          ckpt_root=tempfile.mkdtemp())
+tenant = vmm.create_vm("alice", slice_shape=(1, 1))
+tenant.device.open()
+tenant.device.reprogram(
+    ProgramRequest(arch=ARCH, kind="train", seq_len=64, global_batch=4))
+
+params = model.init(jax.random.PRNGKey(0))
+opt_state = optim.init(oc, params)
+t0 = time.perf_counter()
+for i in range(STEPS):
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+    params, opt_state, m = tenant.device.run(params, opt_state, batch)
+virt_s = time.perf_counter() - t0
+print(f"[virtualized] {STEPS} steps, loss={float(m['loss']):.4f}, "
+      f"{virt_s:.2f}s  (ratio {virt_s / native_s:.3f})")
+
+tenant.state = {"params": params}
+vmm.checkpoint_tenant(tenant)
+print(report(vmm, perf_ratio=virt_s / native_s,
+             same_artifact=True).to_markdown())
+vmm.shutdown()

@@ -1,0 +1,80 @@
+"""End-to-end training driver: a ~20M-param decoder LM (scale with
+--width/--depth toward 100M+ if you have the cores) trained for a few
+hundred steps on the synthetic learnable stream with checkpointing and
+restart support — the full substrate in one script.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpointing import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeCell, ShardingProfile
+from repro.data import pipeline_for
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--depth", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/vpod_e2e_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="e2e-lm", family="dense", n_layers=args.depth,
+        d_model=args.width, n_heads=max(args.width // 64, 2),
+        n_kv_heads=max(args.width // 128, 1), d_ff=args.width * 4,
+        vocab=8192, max_seq_len=args.seq,
+        sharding=ShardingProfile(remat="none"))
+    print(f"model: {cfg.param_counts()['total'] / 1e6:.1f}M params")
+
+    cell = ShapeCell("e2e", args.seq, args.batch, "train")
+    model = build_model(cfg)
+    oc = optim.OptConfig(peak_lr=1e-3, warmup_steps=20,
+                         decay_steps=args.steps)
+    pipe = pipeline_for(cfg, cell, seed=0)
+    mgr = CheckpointManager(args.ckpt, save_interval=50, keep_n=2)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = optim.init(oc, params)
+    start = 0
+    if args.resume:
+        got = mgr.restore_latest({"params": params, "opt": opt_state})
+        if got:
+            start, tree, _ = got
+            params, opt_state = tree["params"], tree["opt"]
+            print(f"resumed from step {start}")
+
+    step_fn = jax.jit(optim.make_train_step(model, oc))
+    it = pipe.prefetch(start_step=start, depth=2)
+    t0 = time.perf_counter()
+    tokens = 0
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        tokens += args.batch * args.seq
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {step:4d}  loss {float(m['loss']):7.4f}  "
+                  f"lr {float(m['lr']):.2e}  {tokens / max(dt, 1e-9):,.0f}"
+                  f" tok/s")
+        if mgr.should_save(step):
+            mgr.save(step, {"params": params, "opt": opt_state})
+    mgr.wait()
+    it.close()
+    print(f"final loss {float(m['loss']):.4f} "
+          f"({args.steps - start} steps, "
+          f"{time.perf_counter() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

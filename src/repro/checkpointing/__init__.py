@@ -1,0 +1,4 @@
+from repro.checkpointing.checkpoint import (CheckpointManager, latest,
+                                            restore, save)
+
+__all__ = ["CheckpointManager", "latest", "restore", "save"]

@@ -1,0 +1,12 @@
+from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                PREFILL_32K, SHAPES_BY_NAME, TRAIN_4K,
+                                EncoderConfig, FrontendConfig, ModelConfig,
+                                MoEConfig, ShapeCell, ShardingProfile,
+                                applicable_shapes, get_config, list_archs)
+
+__all__ = [
+    "ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "SHAPES_BY_NAME",
+    "TRAIN_4K", "EncoderConfig", "FrontendConfig", "ModelConfig", "MoEConfig",
+    "ShapeCell", "ShardingProfile", "applicable_shapes", "get_config",
+    "list_archs",
+]

@@ -1,0 +1,13 @@
+"""Side-effect import module: registers every assigned architecture."""
+# one module per assigned arch (exact public-literature configs + reduced
+# smoke variants); importing registers them with configs.base._REGISTRY.
+from repro.configs import whisper_medium      # noqa: F401
+from repro.configs import internlm2_1_8b      # noqa: F401
+from repro.configs import qwen1_5_0_5b        # noqa: F401
+from repro.configs import phi3_mini_3_8b      # noqa: F401
+from repro.configs import starcoder2_15b      # noqa: F401
+from repro.configs import recurrentgemma_2b   # noqa: F401
+from repro.configs import rwkv6_7b            # noqa: F401
+from repro.configs import internvl2_2b        # noqa: F401
+from repro.configs import kimi_k2_1t_a32b     # noqa: F401
+from repro.configs import mixtral_8x7b        # noqa: F401

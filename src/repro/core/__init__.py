@@ -1,0 +1,32 @@
+"""vPOD core — the paper's contribution as a composable JAX runtime layer.
+
+FPGA-virtualization concept → module map (full table in DESIGN.md §2):
+  PRR                → vslice.VSlice / Floorplanner
+  shell (DMA, IRQ)   → shell.TransferEngine / CompletionQueue
+  PR controller      → reconfig.CompileService / ProgramLoader / Bitfile
+  software MMU       → mmu.SegmentPool (bitmap / freelist / buddy)
+  VMM                → vmm.VMM (fev / bev / hybrid policies)
+  MMD guest API      → tenant.GuestDevice (the paper's 8 operators)
+  interposition      → interposition.OpLog / TenantCheckpointer
+  elasticity         → elastic.resize / defragment
+  criteria           → criteria.report
+"""
+from repro.core.criteria import CriteriaReport, report
+from repro.core.mmu import (HBM_PER_CHIP, SEGMENT_BYTES, IsolationViolation,
+                            MMUError, OutOfMemory, QuotaExceeded,
+                            SegmentPool)
+from repro.core.reconfig import (Bitfile, CompileService, LegalityError,
+                                 ProgramLoader, ProgramRequest)
+from repro.core.shell import CompletionQueue, TransferEngine
+from repro.core.tenant import GuestDevice, Tenant
+from repro.core.vmm import VMM, AdmissionError
+from repro.core.vslice import Floorplanner, SliceSpec, VSlice
+
+__all__ = [
+    "VMM", "AdmissionError", "Bitfile", "CompileService", "CompletionQueue",
+    "CriteriaReport", "Floorplanner", "GuestDevice", "HBM_PER_CHIP",
+    "IsolationViolation", "LegalityError", "MMUError", "OutOfMemory",
+    "ProgramLoader", "ProgramRequest", "QuotaExceeded", "SEGMENT_BYTES",
+    "SegmentPool", "SliceSpec", "Tenant", "TransferEngine", "VSlice",
+    "report",
+]

@@ -1,0 +1,389 @@
+"""VMM — the hypervisor / resource broker (paper §III-B/C, §IV).
+
+Policies (the paper's taxonomy, selectable per-VMM):
+
+* ``fev``    — front-end virtualization: *every* operator, including step
+  execution, is enqueued to the broker thread which round-robins across
+  tenant queues. Maximal isolation+interposition; queueing overhead on the
+  data plane; reconfigurations serialize behind the broker.
+* ``bev``    — back-end pass-through: the tenant owns its slice; ``run``
+  invokes the loaded executable directly; only load/unload is mediated.
+* ``hybrid`` — the paper's design (default): control plane (open/close/
+  alloc/free/reprogram/checkpoint) mediated + logged, data plane
+  pass-through with op-log sampling.
+
+Also implemented here: admission (floorplanner + MMU pool + completion
+queue per tenant), the freeze/quiesce protocol around reconfiguration,
+straggler detection (EWMA deadline), slice-failure handling via live
+migration, and the per-tenant HBM quota.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import mmu as mmu_mod
+from repro.core.interposition import OpLog, TenantCheckpointer
+from repro.core.isolation import IsolationAuditor
+from repro.core.reconfig import (Bitfile, CompileService, LegalityError,
+                                 ProgramLoader, ProgramRequest)
+from repro.core.shell import CompletionQueue, TransferEngine
+from repro.core.tenant import GuestBuffer, GuestDevice, Tenant
+from repro.core.vslice import Floorplanner
+
+IRQ_DONE = 0           # completion-queue sources
+IRQ_RECONFIG = 1
+IRQ_DEGRADED = 2
+
+
+class AdmissionError(Exception):
+    pass
+
+
+class VMM:
+    def __init__(self, pod_mesh, policy: str = "hybrid",
+                 mmu_backend: str = "bitmap",
+                 transfer_mode: str = "vm_copy",
+                 hbm_per_chip: int = mmu_mod.HBM_PER_CHIP,
+                 segment_bytes: int = mmu_mod.SEGMENT_BYTES,
+                 ckpt_root: str = "/tmp/vpod_ckpt",
+                 straggler_factor: float = 4.0,
+                 oplog_sampling: float = 1.0):
+        assert policy in ("fev", "bev", "hybrid")
+        self.policy = policy
+        self.mmu_backend = mmu_backend
+        self.hbm_per_chip = hbm_per_chip
+        self.segment_bytes = segment_bytes
+        self.floorplanner = Floorplanner(pod_mesh)
+        self.auditor = IsolationAuditor()
+        self.oplog = OpLog(sample_data_plane=(
+            oplog_sampling if policy == "hybrid" else 1.0))
+        self.transfer = TransferEngine(mode=transfer_mode)
+        self.compiler = CompileService()
+        self.loader = ProgramLoader(auditor=self.auditor)
+        self.checkpointer = TenantCheckpointer(ckpt_root)
+        self.tenants: Dict[str, Tenant] = {}
+        self.straggler_factor = straggler_factor
+        self._ewma: Dict[Tuple[str, str], float] = {}
+        self._lock = threading.Lock()
+        # FEV broker
+        self._queues: Dict[str, queue.Queue] = {}
+        self._broker_stop = threading.Event()
+        self._broker = None
+        if policy == "fev":
+            self._broker = threading.Thread(target=self._broker_loop,
+                                            daemon=True)
+            self._broker.start()
+
+    # ==================================================================
+    # Admission / teardown
+    # ==================================================================
+    def create_vm(self, name: str, slice_shape: Tuple[int, int],
+                  hbm_quota_bytes: Optional[int] = None) -> Tenant:
+        rec = self.oplog.begin(name, "admit", {"shape": slice_shape})
+        vs = self.floorplanner.allocate(slice_shape)
+        if vs is None:
+            self.oplog.end(rec)
+            raise AdmissionError(
+                f"no {slice_shape} slice available "
+                f"(util={self.floorplanner.utilization():.0%})")
+        pool = mmu_mod.SegmentPool(
+            total_bytes=vs.n_devices * self.hbm_per_chip,
+            backend=self.mmu_backend, segment_bytes=self.segment_bytes,
+            auditor=self.auditor)
+        t = Tenant(name=name, vslice=vs, pool=pool,
+                   cq=CompletionQueue())
+        t.device = GuestDevice(self, t)
+        if hbm_quota_bytes is not None:
+            pool.set_quota(name, hbm_quota_bytes)
+        with self._lock:
+            self.tenants[name] = t
+            self._queues[name] = queue.Queue()
+        self.oplog.end(rec)
+        return t
+
+    def destroy_vm(self, name: str):
+        rec = self.oplog.begin(name, "evict", {})
+        with self._lock:
+            t = self.tenants.pop(name)
+            self._queues.pop(name, None)
+        self.loader.unload(t.vslice)
+        self.floorplanner.free(t.vslice.slice_id)
+        self.oplog.end(rec)
+
+    # ==================================================================
+    # Mediated operators (control plane — always through the VMM)
+    # ==================================================================
+    def op_open(self, t: Tenant):
+        rec = self.oplog.begin(t.name, "open", {})
+        self.oplog.end(rec)
+
+    def op_close(self, t: Tenant):
+        rec = self.oplog.begin(t.name, "close", {})
+        self.oplog.end(rec)
+
+    def op_get_info(self, t: Tenant) -> dict:
+        rec = self.oplog.begin(t.name, "get_info", {})
+        info = {
+            "slice_shape": t.vslice.spec.shape,
+            "n_devices": t.vslice.n_devices,
+            "axis_names": t.vslice.axis_names,
+            "hbm_bytes": t.pool.n_segments * t.pool.segment_bytes,
+            "hbm_free_bytes":
+                t.pool.alloc_backend.free_segments()
+                * t.pool.segment_bytes,
+            "policy": self.policy,
+            "healthy": t.vslice.healthy,
+        }
+        self.oplog.end(rec)
+        return info
+
+    def op_set_irq(self, t: Tenant, handler):
+        rec = self.oplog.begin(t.name, "set_irq", {})
+        t.cq.set_irq(IRQ_DONE, handler)
+        self.oplog.end(rec)
+
+    def op_set_status(self, t: Tenant, handler):
+        rec = self.oplog.begin(t.name, "set_status", {})
+        t.cq.set_irq(IRQ_RECONFIG, handler)
+        t.cq.set_irq(IRQ_DEGRADED, handler)
+        self.oplog.end(rec)
+
+    def op_alloc(self, t: Tenant, nbytes: int, shape, dtype) -> int:
+        rec = self.oplog.begin(t.name, "alloc", {"nbytes": nbytes})
+        try:
+            a = t.pool.alloc(nbytes, owner=t.name)
+        finally:
+            self.oplog.end(rec)
+        t.buffers[a.handle] = GuestBuffer(a.handle, nbytes, tuple(shape),
+                                          str(dtype))
+        return a.handle
+
+    def op_free(self, t: Tenant, handle: int):
+        rec = self.oplog.begin(t.name, "free", {"handle": handle})
+        try:
+            t.pool.free(handle, owner=t.name)
+            t.buffers.pop(handle, None)
+        finally:
+            self.oplog.end(rec)
+
+    def op_reprogram(self, t: Tenant, request):
+        """Compile (or take a warm cache hit), legality-check, freeze, load.
+
+        Passing a raw ``Bitfile`` (rather than a ProgramRequest) skips the
+        VMM's re-binding step and exercises the cross-slice attack path —
+        exactly the paper's 'VM0 flashes PRR1' scenario."""
+        rec = self.oplog.begin(t.name, "reprogram", {})
+        try:
+            if isinstance(request, Bitfile):
+                bitfile = request           # unbound — validate as-is
+            else:
+                bitfile = self.compiler.compile(request, t.vslice)
+                t.program_request = request
+            prog = self.loader.load(bitfile, t.vslice, t.quiesce,
+                                    owner=t.name)
+            t.program = prog
+            t.cq.raise_event(IRQ_RECONFIG, "reconfigured",
+                             {"program": bitfile.program_key,
+                              "compile_s": bitfile.compile_seconds})
+            return prog
+        finally:
+            self.oplog.end(rec)
+
+    # ==================================================================
+    # Data plane (policy-dependent)
+    # ==================================================================
+    def op_write(self, t: Tenant, handle: int, data: np.ndarray,
+                 sharding=None):
+        def work():
+            t.pool.translate(handle, owner=t.name)   # ownership + bounds
+            buf = t.buffers[handle]
+            if data.nbytes > buf.nbytes:
+                raise mmu_mod.IsolationViolation(
+                    f"write of {data.nbytes} B exceeds buffer "
+                    f"{buf.nbytes} B")
+            dev = None if sharding is not None else \
+                t.vslice.devices.flatten()[0]
+            buf.device_array = self.transfer.h2d(
+                data, device=dev, sharding=sharding)
+            return handle
+
+        return self._data_op(t, "write", work,
+                             {"handle": handle, "nbytes": data.nbytes})
+
+    def op_read(self, t: Tenant, handle: int) -> np.ndarray:
+        def work():
+            t.pool.translate(handle, owner=t.name)
+            buf = t.buffers[handle]
+            if buf.device_array is None:
+                raise mmu_mod.MMUError("buffer not written")
+            return self.transfer.d2h(buf.device_array)
+
+        return self._data_op(t, "read", work, {"handle": handle})
+
+    def op_run(self, t: Tenant, *args, **kw):
+        if t.program is None:
+            raise LegalityError("no program loaded — reprogram first")
+
+        def work():
+            out = t.program(*args, **kw)
+            t.cq.raise_event(IRQ_DONE, "run_done", {"step": t.step})
+            t.step += 1
+            return out
+
+        return self._data_op(t, "run", work, {"step": t.step})
+
+    # ------------------------------------------------------------------
+    def _data_op(self, t: Tenant, op: str, work, detail):
+        if self.policy == "fev":
+            fut: queue.Queue = queue.Queue(maxsize=1)
+            self._queues[t.name].put((op, work, detail, fut))
+            ok, val = fut.get()
+            if not ok:
+                raise val
+            return val
+        # bev / hybrid: pass-through (hybrid still samples the op log)
+        rec = self.oplog.begin(t.name, op, detail) \
+            if self.policy == "hybrid" else None
+        t.enter_op()
+        t0 = time.perf_counter()
+        try:
+            return work()
+        finally:
+            t.exit_op()
+            self._observe(t, op, time.perf_counter() - t0)
+            if rec is not None:
+                self.oplog.end(rec)
+
+    def _broker_loop(self):
+        """FEV broker: round-robin one op per tenant queue per sweep."""
+        while not self._broker_stop.is_set():
+            busy = False
+            with self._lock:
+                qs = list(self._queues.items())
+            for name, q in qs:
+                try:
+                    op, work, detail, fut = q.get_nowait()
+                except queue.Empty:
+                    continue
+                busy = True
+                t = self.tenants.get(name)
+                rec = self.oplog.begin(name, op, detail)
+                t.enter_op()
+                t0 = time.perf_counter()
+                try:
+                    fut.put((True, work()))
+                except Exception as e:     # noqa: BLE001 — forwarded
+                    fut.put((False, e))
+                finally:
+                    t.exit_op()
+                    self._observe(t, op, time.perf_counter() - t0)
+                    self.oplog.end(rec)
+            if not busy:
+                time.sleep(0.0005)
+
+    # ------------------------------------------------------------------
+    # Straggler detection: EWMA deadline per (tenant, op)
+    # ------------------------------------------------------------------
+    def _observe(self, t: Tenant, op: str, dt: float):
+        key = (t.name, op)
+        ew = self._ewma.get(key)
+        if ew is not None and dt > self.straggler_factor * ew:
+            t.straggler_count += 1
+            t.cq.raise_event(IRQ_DEGRADED, "straggler",
+                             {"op": op, "dt": dt, "ewma": ew})
+        self._ewma[key] = dt if ew is None else 0.8 * ew + 0.2 * dt
+
+    # ==================================================================
+    # Fault tolerance: checkpoint / restore / migrate (interposition)
+    # ==================================================================
+    def checkpoint_tenant(self, t: Tenant) -> str:
+        rec = self.oplog.begin(t.name, "checkpoint", {"step": t.step})
+        meta = {"step": t.step,
+                "program": (t.program_request.__dict__
+                            if t.program_request else None)}
+        path = self.checkpointer.snapshot(t.name, t.step, t.state, meta)
+        self.oplog.end(rec)
+        return path
+
+    def restore_tenant(self, t: Tenant, template, shardings_tree=None):
+        rec = self.oplog.begin(t.name, "restore", {})
+        step, state, meta = self.checkpointer.restore(
+            t.name, template, shardings_tree)
+        t.state = state
+        t.step = step
+        self.oplog.end(rec)
+        return meta
+
+    def mark_slice_failed(self, slice_id: int):
+        for t in self.tenants.values():
+            if t.vslice.slice_id == slice_id:
+                t.vslice.healthy = False
+                t.cq.raise_event(IRQ_DEGRADED, "slice_failed",
+                                 {"slice": slice_id})
+
+    def migrate_tenant(self, t: Tenant, new_shape=None,
+                       state_template=None, shardings_fn=None) -> Tenant:
+        """Live migration: checkpoint → re-floorplan → re-bind program →
+        restore (re-sharded). Also the elastic grow/shrink primitive."""
+        rec = self.oplog.begin(t.name, "migrate",
+                               {"from": t.vslice.spec.shape,
+                                "to": new_shape or t.vslice.spec.shape})
+        if t.state:
+            self.checkpoint_tenant(t)
+        shape = new_shape or t.vslice.spec.shape
+        old_slice = t.vslice
+        self.loader.unload(old_slice)
+        self.floorplanner.free(old_slice.slice_id)
+        vs = self.floorplanner.allocate(shape)
+        if vs is None:
+            # roll back: re-claim the old rectangle
+            back = self.floorplanner.allocate(old_slice.spec.shape)
+            if back is None:
+                self.oplog.end(rec)
+                raise AdmissionError("migration target unavailable and "
+                                     "rollback failed")
+            t.vslice = back
+            self.oplog.end(rec)
+            raise AdmissionError(f"no {shape} slice for migration")
+        t.vslice = vs
+        pool = mmu_mod.SegmentPool(
+            total_bytes=vs.n_devices * self.hbm_per_chip,
+            backend=self.mmu_backend, segment_bytes=self.segment_bytes,
+            auditor=self.auditor)
+        if t.name in t.pool.quota_segs:
+            pool.quota_segs[t.name] = t.pool.quota_segs[t.name]
+        t.pool = pool
+        t.buffers.clear()
+        if t.program_request is not None:
+            bf = self.compiler.compile(t.program_request, vs)
+            t.program = self.loader.load(bf, vs, t.quiesce, owner=t.name)
+        if t.state and state_template is not None:
+            shardings_tree = shardings_fn(vs) if shardings_fn else None
+            self.restore_tenant(t, state_template, shardings_tree)
+        self.oplog.end(rec)
+        return t
+
+    # ==================================================================
+    def shutdown(self):
+        self._broker_stop.set()
+        if self._broker is not None:
+            self._broker.join(timeout=2)
+
+    def stats(self) -> dict:
+        return {
+            "tenants": len(self.tenants),
+            "floorplan_util": self.floorplanner.utilization(),
+            "fragmentation": self.floorplanner.fragmentation(),
+            "compile_hits": self.compiler.hits,
+            "compile_misses": self.compiler.misses,
+            "reconfigs": self.loader.reconfigs,
+            "violations": self.auditor.summary(),
+            "transfer": self.transfer.stats.__dict__,
+            "oplog_records": len(self.oplog.records),
+        }

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticTokenPipeline,
+                                 pipeline_for)
+
+__all__ = ["DataConfig", "SyntheticTokenPipeline", "pipeline_for"]

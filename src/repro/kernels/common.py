@@ -1,0 +1,18 @@
+"""Shared kernel utilities: interpret-mode detection and grid helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode on non-TPU backends (this
+    container is CPU-only; TPU is the compilation target)."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

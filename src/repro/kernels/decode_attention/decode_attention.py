@@ -1,0 +1,100 @@
+"""Decode attention — one query token against a deep KV cache.
+
+Flash-decoding-style: the KV cache is streamed through VMEM in blocks with
+an online-softmax carry; the (1, hd) query stays VMEM-resident for the
+whole sweep. Validity masking (ring caches that are not yet full) comes
+from a scalar `pos` operand placed in SMEM. Decode is HBM-bandwidth-bound:
+the kernel's roofline is the cache-read stream, which is why the block
+size is large (maximize DMA efficiency, compute is negligible).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BKV = 1024
+_NEG = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, bkv, nk, window, capacity):
+    kidx = pl.program_id(1)
+
+    @pl.when(kidx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # (1, hd)
+    k = k_ref[0, 0]                                   # (bkv, hd)
+    v = v_ref[0, 0]
+    pos = pos_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    slot = kidx * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+    valid = (slot <= pos) | (pos >= capacity)
+    if window > 0:
+        cur = jnp.mod(pos, capacity)
+        age = jnp.mod(cur - slot, capacity)
+        valid &= age < window
+    s = jnp.where(valid, s, _NEG)
+    m_prev = m_ref[:1, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(kidx == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:1, :1], 1e-30)).astype(
+                           o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret", "bkv"))
+def decode_attention(q, k, v, pos, *, window=0, interpret=False, bkv=BKV):
+    """q: (B,Hq,1,hd); k/v: (B,Hkv,C,hd) ring caches; pos: () int32."""
+    B, Hq, _, hd = q.shape
+    _, Hkv, C, _ = k.shape
+    G = Hq // Hkv
+    bkv = min(bkv, C)
+    assert C % bkv == 0
+    nk = C // bkv
+    grid = (B * Hq, nk)
+    pos_arr = jnp.broadcast_to(pos[None].astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_kernel, scale=hd ** -0.5, bkv=bkv, nk=nk,
+                               window=window, capacity=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda g, j, pos: (g // Hq, g % Hq, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda g, j, pos: (g // Hq, (g % Hq) // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda g, j, pos: (g // Hq, (g % Hq) // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda g, j, pos: (g // Hq, g % Hq, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(pos_arr, q, k, v)

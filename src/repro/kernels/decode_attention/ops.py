@@ -1,0 +1,21 @@
+"""Public wrapper (model cache layout (B,C,H,hd) ↔ kernel (B,H,C,hd))."""
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.decode_attention.decode_attention import (BKV,
+                                                             decode_attention)
+
+
+def decode_attention_op(q, k_cache, v_cache, pos, *, window=0):
+    """q: (B,1,Hq,hd); caches: (B,C,Hkv,hd); pos () int32."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    C = kt.shape[2]
+    bkv = BKV
+    while C % bkv:
+        bkv //= 2
+    out = decode_attention(qt, kt, vt, jnp.asarray(pos, jnp.int32),
+                           window=window, interpret=use_interpret(),
+                           bkv=max(bkv, 1))
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for decode attention (ring-cache semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, pos, *, window=0):
+    """q: (B,Hq,1,hd); k/v: (B,Hkv,C,hd); pos scalar → (B,Hq,1,hd)."""
+    B, Hq, _, hd = q.shape
+    Hkv, C = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr) / np.sqrt(hd)
+    slot = jnp.arange(C)
+    valid = (slot <= pos) | (pos >= C)
+    if window > 0:
+        cur = jnp.mod(pos, C)
+        age = jnp.mod(cur - slot, C)
+        valid &= age < window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (causal/window GQA)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,Hq,Sq,hd); k/v: (B,Hkv,Sk,hd) → (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: associative linear scan (the XLA model path)."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t with h_{-1} = h0. All fp32 (B,S,D)."""
+    B, S, D = a.shape
+    a_ext = jnp.concatenate([jnp.zeros((B, 1, D), a.dtype), a], axis=1)
+    b_ext = jnp.concatenate([h0[:, None], b], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    return h[:, 1:]

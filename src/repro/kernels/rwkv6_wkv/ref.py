@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: sequential WKV recurrence (exact semantics)."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_wkv_ref(r, k, v, logw, u, s0):
+    """Sequential scan over tokens. Same shapes as the kernel."""
+    B, H, S, K = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp                    # (B,H,K)
+        o_t = (jnp.einsum("bhk,bhkv->bhv", r_t, s)
+               + jnp.einsum("bhk,hk,bhk->bh", r_t, u, k_t)[..., None] * v_t)
+        s_new = jnp.exp(lw_t)[..., None] * s + jnp.einsum(
+            "bhk,bhv->bhkv", k_t, v_t)
+        return s_new, o_t
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, logw))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 2, 0, 3), s_fin

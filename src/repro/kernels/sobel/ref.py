@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Sobel kernel."""
+import jax.numpy as jnp
+
+_GX = jnp.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], jnp.float32)
+_GY = jnp.array([[-1, -2, -1], [0, 0, 0], [1, 2, 1]], jnp.float32)
+
+
+def sobel_ref(x):
+    """x: (H, W) → (H, W) gradient magnitude with zero padding."""
+    xp = jnp.pad(x.astype(jnp.float32), 1)
+    H, W = x.shape
+    gx = jnp.zeros((H, W), jnp.float32)
+    gy = jnp.zeros((H, W), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            win = xp[dy:dy + H, dx:dx + W]
+            gx = gx + _GX[dy, dx] * win
+            gy = gy + _GY[dy, dx] * win
+    return jnp.sqrt(gx * gx + gy * gy).astype(x.dtype)

@@ -1,0 +1,15 @@
+"""jit'd public wrapper: auto-interpret off-TPU, pads to block multiple."""
+import jax.numpy as jnp
+
+from repro.kernels.common import round_up, use_interpret
+from repro.kernels.vecadd.vecadd import BLOCK, vecadd
+
+
+def vecadd_op(x, y, block=BLOCK):
+    n = x.shape[0]
+    np_ = round_up(n, block)
+    if np_ != n:
+        x = jnp.pad(x, (0, np_ - n))
+        y = jnp.pad(y, (0, np_ - n))
+    out = vecadd(x, y, interpret=use_interpret(), block=block)
+    return out[:n]

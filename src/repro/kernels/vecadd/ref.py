@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the vecadd kernel."""
+import jax.numpy as jnp
+
+
+def vecadd_ref(x, y):
+    return x + y

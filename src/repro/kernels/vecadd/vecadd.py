@@ -1,0 +1,35 @@
+"""Vector addition — the paper's benchmark app #3, as a Pallas TPU kernel.
+
+Trivial by design: it exists to measure the *harness* (launch + DMA +
+virtualization overhead), exactly the role it plays in the paper's Fig. 6.
+1-D stream tiled into VMEM blocks sized for the VPU (8×128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128 * 16          # 16 KiB f32 per operand block
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def vecadd(x, y, *, interpret=False, block=BLOCK):
+    assert x.shape == y.shape and x.ndim == 1
+    n = x.shape[0]
+    assert n % block == 0, f"pad to a multiple of {block}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, y)

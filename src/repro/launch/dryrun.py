@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax-importing import: jax locks the device count on
+# first init. The 512 host devices exist ONLY for this dry-run process.
+
+import argparse          # noqa: E402
+import gzip              # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell and derive the roofline terms from the compiled artifact.
+
+Per cell this prints ``compiled.memory_analysis()`` (proves the program
+fits) and summarizes ``compiled.cost_analysis()`` + the trip-count-aware
+HLO analysis (launch/hlo_analysis.py), then writes a JSON artifact to
+``experiments/dryrun/`` which benchmarks/roofline.py and EXPERIMENTS.md
+consume.
+
+v5e hardware constants for the roofline:
+  197 TFLOP/s bf16/chip · 819 GB/s HBM · ~50 GB/s/link ICI · 16 GB HBM.
+"""
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16 * 2 ** 30
+
+
+def analyze_and_update(art, txt, cfg, cell, n_dev):
+    """Roofline terms from HLO text — reusable for offline re-analysis."""
+    from repro.launch import hlo_analysis
+    st = hlo_analysis.analyze(txt)
+    compute_s = st.dot_flops / PEAK_FLOPS
+    memory_s = st.mem_bytes / HBM_BW
+    collective_s = st.total_collective_bytes() / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    pc = cfg.param_counts()
+    tokens = cell.global_batch * (
+        cell.seq_len if cell.kind in ("train", "prefill") else 1)
+    factor = 6 if cell.kind == "train" else 2
+    model_flops_dev = factor * pc["active"] * tokens / n_dev
+    ratio = model_flops_dev / max(st.dot_flops, 1)
+    art.update({
+        "hlo": {
+            "dot_flops": st.dot_flops,
+            "mem_bytes": st.mem_bytes,
+            "collective_bytes": st.collective_bytes,
+            "collective_count": st.collective_count,
+            "unknown_trip_whiles": st.unknown_trip_whiles,
+        },
+        "roofline": {**terms, "dominant": dominant,
+                     "step_time_lb_s": max(terms.values()),
+                     "roofline_fraction_compute":
+                         compute_s / max(terms.values())
+                         if max(terms.values()) > 0 else 0.0},
+        "model_flops": {"params_total": pc["total"],
+                        "params_active": pc["active"],
+                        "tokens": tokens,
+                        "model_flops_per_dev": model_flops_dev,
+                        "useful_ratio": ratio},
+    })
+    return art
+
+
+def run_cell(cfg, cell, mesh, mesh_name, out_dir, force=False,
+             save_hlo=True, opt_flags=(), reanalyze=False):
+    import gzip
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{cfg.name}_{cell.name}_{mesh_name}"
+    path = os.path.join(out_dir, tag + ".json")
+    hlo_path = os.path.join(out_dir, tag + ".hlo.gz")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            art = json.load(f)
+        if reanalyze and art.get("ok") and os.path.exists(hlo_path):
+            with gzip.open(hlo_path, "rt") as f:
+                txt = f.read()
+            n_dev = art["n_devices"]
+            art = analyze_and_update(art, txt, cfg, cell, n_dev)
+            tm = art["roofline"]
+            print(f"[{tag}] re-analyzed: compute={tm['compute_s']*1e3:.2f}ms"
+                  f" memory={tm['memory_s']*1e3:.2f}ms collective="
+                  f"{tm['collective_s']*1e3:.2f}ms "
+                  f"dominant={tm['dominant']}")
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+        return art
+
+    from repro.parallel import build_step_for_cell
+    n_dev = mesh.devices.size
+    art = {"arch": cfg.name, "shape": cell.name, "mesh": mesh_name,
+           "n_devices": int(n_dev), "kind": cell.kind,
+           "opt_flags": list(opt_flags), "ok": False}
+    try:
+        t0 = time.perf_counter()
+        jitted, abs_args = build_step_for_cell(cfg, mesh, cell)
+        lowered = jitted.lower(*abs_args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        ma = compiled.memory_analysis()
+        print(f"[{tag}] memory_analysis:", ma)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        ca_flops = float(ca.get("flops", 0.0))
+        ca_bytes = float(ca.get("bytes accessed", 0.0))
+        print(f"[{tag}] cost_analysis: flops={ca_flops:.3e} "
+              f"bytes={ca_bytes:.3e} (loop-naive)")
+
+        txt = compiled.as_text()
+        if save_hlo:
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(txt)
+
+        per_dev_bytes = (ma.argument_size_in_bytes
+                         + ma.temp_size_in_bytes
+                         + ma.output_size_in_bytes
+                         - ma.alias_size_in_bytes)
+        art.update({
+            "ok": True,
+            "t_lower_s": t_lower, "t_compile_s": t_compile,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "per_device_bytes": per_dev_bytes,
+                "fits_hbm": bool(per_dev_bytes <= HBM_BYTES),
+            },
+            "cost_analysis": {"flops_naive": ca_flops,
+                              "bytes_naive": ca_bytes},
+        })
+        art = analyze_and_update(art, txt, cfg, cell, n_dev)
+        tm = art["roofline"]
+        print(f"[{tag}] terms: compute={tm['compute_s']*1e3:.2f}ms "
+              f"memory={tm['memory_s']*1e3:.2f}ms "
+              f"collective={tm['collective_s']*1e3:.2f}ms "
+              f"dominant={tm['dominant']} useful_ratio="
+              f"{art['model_flops']['useful_ratio']:.3f}")
+    except Exception as e:   # noqa: BLE001 — recorded in the artifact
+        art["error"] = f"{type(e).__name__}: {e}"
+        art["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{tag}] FAILED: {art['error'][:200]}")
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-save-hlo", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=["gather", "ep"])
+    ap.add_argument("--no-splitk", action="store_true",
+                    help="disable split-KV decode (reproduce baseline)")
+    ap.add_argument("--suffix", default="",
+                    help="artifact tag suffix (e.g. _opt for hillclimbs)")
+    args = ap.parse_args()
+
+    from repro.configs import (SHAPES_BY_NAME, applicable_shapes, get_config,
+                               list_archs)
+    from repro.launch.mesh import make_production_mesh
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    import dataclasses
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        flags = []
+        prof = cfg.sharding
+        if args.moe_impl is not None:
+            prof = dataclasses.replace(prof, moe_impl=args.moe_impl)
+            flags.append(f"moe={args.moe_impl}")
+        if args.no_splitk:
+            prof = dataclasses.replace(prof, decode_splitk=False)
+            flags.append("no_splitk")
+        if prof is not cfg.sharding:
+            cfg = dataclasses.replace(cfg, sharding=prof)
+        cells = applicable_shapes(cfg)
+        if args.shape != "all":
+            cells = [c for c in cells if c.name in args.shape.split(",")]
+        for cell in cells:
+            for mesh_name, mesh in meshes:
+                art = run_cell(cfg, cell, mesh,
+                               mesh_name + args.suffix, args.out,
+                               force=args.force,
+                               save_hlo=not args.no_save_hlo,
+                               reanalyze=args.reanalyze,
+                               opt_flags=tuple(flags))
+                results.append(art)
+
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n=== dry-run: {ok}/{len(results)} cells compiled ===")
+    for r in results:
+        if not r.get("ok"):
+            print("  FAIL:", r["arch"], r["shape"], r["mesh"],
+                  r.get("error", "")[:120])
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

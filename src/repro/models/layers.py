@@ -1,0 +1,181 @@
+"""Shared model layers: norms, positions, dense FFNs, inits, dtype utils.
+
+Conventions
+-----------
+* Parameters live in ``cfg.param_dtype``; compute casts to
+  ``cfg.compute_dtype``; norms / softmax / recurrent states run in fp32.
+* Every init function is pure (key → pytree) so the whole model can be
+  materialized with ``jax.eval_shape`` for the AOT dry-run.
+* Layer application functions are shape-polymorphic over batch/seq.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def cast(x, dtype_name):
+    return x.astype(dt(dtype_name))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dt(dtype))
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(
+        dt(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dt(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dt(cfg.param_dtype))
+    return p
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, d_head, theta):
+    """positions (…,) int → (…, d_head/2) angles."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, theta)          # (S, hd/2) or (B,S,hd/2)
+    if ang.ndim == 2:                                # (S, hd/2)
+        ang = ang[None, :, None, :]                  # (1, S, 1, hd/2)
+    else:
+        ang = ang[:, :, None, :]                     # (B, S, 1, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos, d, offset=0):
+    pos = np.arange(offset, offset + n_pos, dtype=np.float32)
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+def add_abs_positions(x, pos0=0):
+    """Add sinusoidal positions (traced-safe for static offsets only)."""
+    B, S, D = x.shape
+    table = sinusoidal_positions(S, D, offset=pos0)
+    return x + table[None].astype(x.dtype)
+
+
+def abs_position_vector(pos, d):
+    """Single-position sinusoidal embedding with traced ``pos`` (decode)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFNs (swiglu / gelu)
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(cfg, key, kind=None, d_ff=None):
+    kind = kind or cfg.ffn_kind
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, d_ff, cfg.param_dtype),
+                "w_up": dense_init(ks[1], d, d_ff, cfg.param_dtype),
+                "w_down": dense_init(ks[2], d_ff, d, cfg.param_dtype)}
+    if kind == "gelu":
+        return {"w_up": dense_init(ks[0], d, d_ff, cfg.param_dtype),
+                "b_up": jnp.zeros((d_ff,), dt(cfg.param_dtype)),
+                "w_down": dense_init(ks[1], d_ff, d, cfg.param_dtype),
+                "b_down": jnp.zeros((d,), dt(cfg.param_dtype))}
+    raise ValueError(kind)
+
+
+def apply_ffn(cfg, p, x, kind=None):
+    kind = kind or cfg.ffn_kind
+    cd = dt(cfg.compute_dtype)
+    x = x.astype(cd)
+    if kind == "swiglu":
+        g = jnp.dot(x, p["w_gate"].astype(cd))
+        u = jnp.dot(x, p["w_up"].astype(cd))
+        h = jax.nn.silu(g) * u
+        return jnp.dot(h, p["w_down"].astype(cd))
+    if kind == "gelu":
+        h = jax.nn.gelu(jnp.dot(x, p["w_up"].astype(cd))
+                        + p["b_up"].astype(cd))
+        return jnp.dot(h, p["w_down"].astype(cd)) + p["b_down"].astype(cd)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V) any dtype; labels (B,S) int32; mask (B,S) optional.
+
+    fp32 logsumexp; returns (mean_loss, n_tokens).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / n, n

@@ -1,0 +1,356 @@
+"""LM assembly: layer specs → scan-segment layout → full/decode forward.
+
+Scan-over-layers: homogeneous runs of layers are stacked (leading axis =
+#periods) and applied with ``jax.lax.scan`` — keeps HLO size and compile
+time O(1) in depth, which matters for the 61-layer 1T-param dry-run.
+Heterogeneous patterns (Griffin's (rglru, rglru, swa), kimi's leading dense
+layer) become [unroll prefix] + [scan over periods] + [unroll tail].
+
+Caches: every layer kind owns a cache pytree —
+  attn/swa : {"k","v"} ring buffers (B, C, Hkv, hd), slot = pos % C
+  rglru    : {"h" (B,d) fp32, "conv" (B,3,d)}
+  rwkv     : {"shift" (B,d), "s" (B,H,dk,dk) fp32}
+  channelmix ffn: {"shift" (B,d)}
+  cross-attn (enc-dec): {"k","v"} (B, S_enc, H, hd) — static after prefill
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.layers import (add_abs_positions, apply_ffn, apply_norm,
+                                 dt, embed_init, init_ffn, init_norm)
+
+# ---------------------------------------------------------------------------
+# Layer specs and layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                  # attn | swa | rglru | rwkv
+    ffn: str                    # swiglu | gelu | moe | channelmix
+    d_ff: int
+    cross: bool = False
+
+
+def layer_specs(cfg, cross=False) -> Tuple[LayerSpec, ...]:
+    out = []
+    for i in range(cfg.n_layers):
+        mixer = cfg.layer_mixer(i)
+        ffn, d_ff = cfg.ffn_kind, cfg.d_ff
+        if cfg.ffn_kind == "moe" and i < cfg.moe.first_dense_layers:
+            ffn, d_ff = "swiglu", cfg.moe.dense_d_ff
+        out.append(LayerSpec(mixer, ffn, d_ff, cross))
+    return tuple(out)
+
+
+def build_layout(cfg, specs):
+    """→ list of ("unroll", specs_tuple) / ("scan", period_specs, n)."""
+    n = len(specs)
+    if not cfg.sharding.scan_layers:
+        return [("unroll", specs)]
+    prefix = cfg.moe.first_dense_layers if cfg.ffn_kind == "moe" else 0
+    p = len(cfg.block_pattern)
+    body = specs[prefix:]
+    n_scan, tail = divmod(len(body), p)
+    period = body[:p]
+    for j in range(n_scan):                      # verify true periodicity
+        assert body[j * p:(j + 1) * p] == period, "non-periodic stack"
+    layout = []
+    if prefix:
+        layout.append(("unroll", specs[:prefix]))
+    if n_scan:
+        layout.append(("scan", period, n_scan))
+    if tail:
+        layout.append(("unroll", body[n_scan * p:]))
+    return layout
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(cfg, key, spec: LayerSpec):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if spec.mixer in ("attn", "swa"):
+        p["mixer"] = attn.init_attn(cfg, ks[0])
+    elif spec.mixer == "rglru":
+        p["mixer"] = rec.init_rglru(cfg, ks[0])
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rec.init_rwkv_tmix(cfg, ks[0])
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross:
+        p["norm_cross"] = init_norm(cfg)
+        p["cross"] = attn.init_attn(cfg, ks[1])
+    if spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(cfg, ks[2])
+    elif spec.ffn == "channelmix":
+        p["ffn"] = rec.init_channelmix(cfg, ks[2])
+    else:
+        p["ffn"] = init_ffn(cfg, ks[2], kind=spec.ffn, d_ff=spec.d_ff)
+    return p
+
+
+def init_layer_cache(cfg, spec: LayerSpec, batch, capacity, enc_len=0):
+    """Zero cache pytree for one layer (concrete; eval_shape-able)."""
+    cd = dt(cfg.compute_dtype)
+    c = {}
+    if spec.mixer in ("attn", "swa"):
+        C = capacity if spec.mixer == "attn" else min(cfg.window, capacity)
+        c["mixer"] = {
+            "k": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), cd),
+            "v": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), cd)}
+    elif spec.mixer == "rglru":
+        c["mixer"] = {"h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                      "conv": jnp.zeros(
+                          (batch, rec.RG_CONV_WIDTH - 1, cfg.d_model), cd)}
+    elif spec.mixer == "rwkv":
+        dk = cfg.rwkv_head_dim
+        H = cfg.d_model // dk
+        c["mixer"] = {"shift": jnp.zeros((batch, cfg.d_model), cd),
+                      "s": jnp.zeros((batch, H, dk, dk), jnp.float32)}
+    if spec.cross:
+        c["cross"] = {
+            "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head), cd),
+            "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head), cd)}
+    if spec.ffn == "channelmix":
+        c["ffn"] = {"shift": jnp.zeros((batch, cfg.d_model), cd)}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply
+# ---------------------------------------------------------------------------
+
+
+def apply_layer_full(cfg, spec, p, x, ctx, cache=None):
+    """Full-sequence layer. Returns (x', new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    mk = ctx["make_cache"]
+    if spec.mixer in ("attn", "swa"):
+        window = cfg.window if spec.mixer == "swa" else 0
+        y, mcache = attn.attn_full(
+            cfg, p["mixer"], h, causal=ctx["causal"], window=window,
+            positions=ctx.get("positions"), make_cache=mk,
+            cache_capacity=ctx.get("capacity", 0))
+    elif spec.mixer == "rglru":
+        y, mcache = rec.rglru_full(
+            cfg, p["mixer"], h,
+            h0=cache["mixer"]["h"] if cache else None,
+            conv0=cache["mixer"]["conv"] if cache else None, make_cache=mk)
+    else:  # rwkv
+        y, mcache = rec.rwkv_tmix_full(
+            cfg, p["mixer"], h, cache=cache["mixer"] if cache else None,
+            make_cache=mk)
+    x = x + y.astype(x.dtype)
+
+    ccache = None
+    if spec.cross:
+        hc = apply_norm(cfg, p["norm_cross"], x)
+        ckv = attn.cross_kv(cfg, p["cross"], ctx["enc_out"])
+        q = jnp.einsum("bsd,dhk->bshk", hc.astype(ckv["k"].dtype),
+                       p["cross"]["wq"].astype(ckv["k"].dtype))
+        if "bq" in p["cross"]:
+            q = q + p["cross"]["bq"].astype(q.dtype)
+        o = attn.attention_core(
+            q, ckv["k"], ckv["v"], causal=False, window=0,
+            q_pos=jnp.arange(q.shape[1]), k_pos=jnp.arange(ckv["k"].shape[1]))
+        y = attn._out_proj(cfg, p["cross"], o)
+        x = x + y.astype(x.dtype)
+        ccache = ckv if mk else None
+
+    h2 = apply_norm(cfg, p["norm2"], x)
+    fcache = None
+    if spec.ffn == "moe":
+        y2, aux = moe_mod.apply_moe(cfg, p["ffn"], h2,
+                                    mesh=ctx.get("mesh"))
+    elif spec.ffn == "channelmix":
+        y2, fcache = rec.channelmix_full(
+            cfg, p["ffn"], h2, cache=cache["ffn"] if cache else None,
+            make_cache=mk)
+    else:
+        y2 = apply_ffn(cfg, p["ffn"], h2, kind=spec.ffn)
+    x = x + y2.astype(x.dtype)
+
+    new_cache = None
+    if mk:
+        new_cache = {}
+        if mcache is not None:
+            new_cache["mixer"] = mcache
+        if ccache is not None:
+            new_cache["cross"] = ccache
+        if fcache is not None:
+            new_cache["ffn"] = fcache
+    return x, new_cache, aux
+
+
+def apply_layer_decode(cfg, spec, p, x, cache, ctx):
+    """One-token layer step. Returns (x', cache')."""
+    pos = ctx["pos"]
+    h = apply_norm(cfg, p["norm1"], x)
+    new_cache = dict(cache)
+    if spec.mixer in ("attn", "swa"):
+        window = cfg.window if spec.mixer == "swa" else 0
+        y, new_cache["mixer"] = attn.attn_decode(
+            cfg, p["mixer"], h, cache["mixer"], pos, window=window,
+            mesh=ctx.get("mesh"))
+    elif spec.mixer == "rglru":
+        y, new_cache["mixer"] = rec.rglru_decode(
+            cfg, p["mixer"], h, cache["mixer"])
+    else:
+        y, new_cache["mixer"] = rec.rwkv_tmix_decode(
+            cfg, p["mixer"], h, cache["mixer"])
+    x = x + y.astype(x.dtype)
+
+    if spec.cross:
+        hc = apply_norm(cfg, p["norm_cross"], x)
+        y = attn.cross_attn_decode(cfg, p["cross"], hc, cache["cross"])
+        x = x + y.astype(x.dtype)
+
+    h2 = apply_norm(cfg, p["norm2"], x)
+    if spec.ffn == "moe":
+        y2, _ = moe_mod.apply_moe(cfg, p["ffn"], h2, mesh=ctx.get("mesh"))
+    elif spec.ffn == "channelmix":
+        y2, new_cache["ffn"] = rec.channelmix_decode(
+            cfg, p["ffn"], h2, cache["ffn"])
+    else:
+        y2 = apply_ffn(cfg, p["ffn"], h2, kind=spec.ffn)
+    return x + y2.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack init / apply over the segment layout
+# ---------------------------------------------------------------------------
+
+
+def init_stack(cfg, key, specs):
+    layout = build_layout(cfg, specs)
+    segs = []
+    for entry in layout:
+        if entry[0] == "unroll":
+            _, sp = entry
+            key, *ks = jax.random.split(key, len(sp) + 1)
+            segs.append([init_layer(cfg, k, s) for k, s in zip(ks, sp)])
+        else:
+            _, period, n = entry
+            key, sub = jax.random.split(key)
+
+            def one(k, period=period):
+                kk = jax.random.split(k, len(period))
+                return [init_layer(cfg, kk[i], s)
+                        for i, s in enumerate(period)]
+
+            segs.append(jax.vmap(one)(jax.random.split(sub, n)))
+    return segs
+
+
+def init_stack_cache(cfg, specs, batch, capacity, enc_len=0):
+    layout = build_layout(cfg, specs)
+    out = []
+    for entry in layout:
+        if entry[0] == "unroll":
+            out.append([init_layer_cache(cfg, s, batch, capacity, enc_len)
+                        for s in entry[1]])
+        else:
+            _, period, n = entry
+            one = [init_layer_cache(cfg, s, batch, capacity, enc_len)
+                   for s in period]
+            out.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one))
+    return out
+
+
+def _maybe_remat(cfg, fn):
+    remat = cfg.sharding.remat
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    # 'dots': keep projection outputs (cheap recompute, high memory)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def apply_stack_full(cfg, specs, segs, x, ctx, caches=None):
+    """Full-sequence stack. Returns (x, new_caches, aux_sum)."""
+    layout = build_layout(cfg, specs)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, entry in enumerate(layout):
+        seg_params = segs[si]
+        seg_cache = caches[si] if caches is not None else None
+        if entry[0] == "unroll":
+            sp = entry[1]
+            ncs = []
+            for li, spec in enumerate(sp):
+                x, nc, aux = apply_layer_full(
+                    cfg, spec, seg_params[li], x, ctx,
+                    cache=seg_cache[li] if seg_cache else None)
+                ncs.append(nc)
+                aux_total = aux_total + aux
+            new_caches.append(ncs)
+        else:
+            _, period, n = entry
+
+            def body(carry, xs, period=period):
+                xx, aux_acc = carry
+                p_i = xs[0] if isinstance(xs, tuple) else xs
+                c_i = xs[1] if isinstance(xs, tuple) else None
+                ncs = []
+                for li, spec in enumerate(period):
+                    xx, nc, aux = apply_layer_full(
+                        cfg, spec, p_i[li], xx, ctx,
+                        cache=c_i[li] if c_i is not None else None)
+                    ncs.append(nc)
+                    aux_acc = aux_acc + aux
+                return (xx, aux_acc), (ncs if ctx["make_cache"] else 0)
+
+            body = _maybe_remat(cfg, body)
+            xs = (seg_params, seg_cache) if seg_cache is not None \
+                else seg_params
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+            new_caches.append(ys if ctx["make_cache"] else None)
+    return x, (new_caches if ctx["make_cache"] else None), aux_total
+
+
+def apply_stack_decode(cfg, specs, segs, x, caches, ctx):
+    """One-token stack step. Returns (x, new_caches)."""
+    layout = build_layout(cfg, specs)
+    new_caches = []
+    for si, entry in enumerate(layout):
+        seg_params = segs[si]
+        seg_cache = caches[si]
+        if entry[0] == "unroll":
+            ncs = []
+            for li, spec in enumerate(entry[1]):
+                x, nc = apply_layer_decode(
+                    cfg, spec, seg_params[li], x, seg_cache[li], ctx)
+                ncs.append(nc)
+            new_caches.append(ncs)
+        else:
+            _, period, n = entry
+
+            def body(xx, xs, period=period):
+                p_i, c_i = xs
+                ncs = []
+                for li, spec in enumerate(period):
+                    xx, nc = apply_layer_decode(
+                        cfg, spec, p_i[li], xx, c_i[li], ctx)
+                    ncs.append(nc)
+                return xx, ncs
+
+            x, ys = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_caches.append(ys)
+    return x, new_caches

@@ -1,0 +1,216 @@
+"""Public model API: one ``Model`` facade per architecture config.
+
+Families and their batch dicts
+------------------------------
+dense/moe/ssm/hybrid : {"tokens" (B,S), "labels" (B,S), "mask" (B,S)}
+vlm                  : + {"patches" (B, n_img, d_in)} — ViT frontend STUB;
+                       tokens cover S - n_img text positions
+audio (whisper)      : {"frames" (B, enc_len, d_in)} — conv-stem STUB;
+                       tokens/labels are decoder side
+
+All entry points are pure functions usable under jit/pjit and AOT
+(``jax.eval_shape`` for the dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.attention import cross_kv
+from repro.models.layers import (abs_position_vector, add_abs_positions,
+                                 apply_norm, dense_init, dt, embed_init,
+                                 init_norm, softmax_cross_entropy)
+
+
+class Model:
+    """Facade bundling init/apply for one architecture."""
+
+    def __init__(self, cfg, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh      # enables shard_map paths (EP MoE, split-KV)
+        self.specs = lm.layer_specs(cfg, cross=cfg.is_encdec)
+        self.enc_specs = None
+        if cfg.is_encdec:
+            enc_cfg = cfg
+            assert (cfg.encoder.d_model or cfg.d_model) == cfg.d_model, \
+                "encoder d_model must match decoder (whisper-medium does)"
+            self.enc_specs = tuple(
+                lm.LayerSpec("attn", "gelu", cfg.d_ff, False)
+                for _ in range(cfg.encoder.n_layers))
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params = {
+            "tok_embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                    cfg.param_dtype),
+            "segments": lm.init_stack(cfg, ks[1], self.specs),
+            "final_norm": init_norm(cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[2], cfg.d_model,
+                                           cfg.padded_vocab,
+                                           cfg.param_dtype, scale=0.02)
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            params["projector"] = {
+                "w1": dense_init(ks[3], cfg.frontend.d_in, cfg.d_model,
+                                 cfg.param_dtype),
+                "w2": dense_init(ks[4], cfg.d_model, cfg.d_model,
+                                 cfg.param_dtype),
+            }
+        if cfg.is_encdec:
+            params["encoder"] = {
+                "segments": lm.init_stack(cfg, ks[5], self.enc_specs),
+                "final_norm": init_norm(cfg),
+            }
+            if cfg.frontend.d_in != cfg.d_model:
+                params["enc_proj"] = dense_init(
+                    ks[6], cfg.frontend.d_in, cfg.d_model, cfg.param_dtype)
+        return params
+
+    # ------------------------------------------------------------------
+    # Embedding assembly
+    # ------------------------------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        cd = dt(self.cfg.compute_dtype)
+        return params["tok_embed"].astype(cd)[tokens]
+
+    def _project_patches(self, params, patches):
+        cd = dt(self.cfg.compute_dtype)
+        pr = params["projector"]
+        h = jax.nn.gelu(jnp.dot(patches.astype(cd), pr["w1"].astype(cd)))
+        return jnp.dot(h, pr["w2"].astype(cd))
+
+    def _lm_logits(self, params, x):
+        cfg = self.cfg
+        cd = dt(cfg.compute_dtype)
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = (params["tok_embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jnp.dot(x.astype(cd), head.astype(cd))
+        if cfg.padded_vocab != cfg.vocab:   # mask padded vocab columns
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+            logits = logits + jnp.where(pad_mask, -1e30, 0.0).astype(
+                logits.dtype)
+        return logits
+
+    # ------------------------------------------------------------------
+    # Encoder (whisper)
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        cd = dt(cfg.compute_dtype)
+        x = frames.astype(cd)
+        if "enc_proj" in params:
+            x = jnp.dot(x, params["enc_proj"].astype(cd))
+        x = add_abs_positions(x)
+        ctx = {"mode": "full", "causal": False, "make_cache": False,
+               "positions": jnp.arange(x.shape[1])}
+        x, _, _ = lm.apply_stack_full(cfg, self.enc_specs,
+                                      params["encoder"]["segments"], x, ctx)
+        return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+    # ------------------------------------------------------------------
+    # Full-sequence forward (train path)
+    # ------------------------------------------------------------------
+    def forward(self, params, batch):
+        """→ (logits (B,S,V), aux_loss)."""
+        cfg = self.cfg
+        x, enc_out = self._assemble_inputs(params, batch)
+        ctx = {"mode": "full", "causal": True, "make_cache": False,
+               "positions": jnp.arange(x.shape[1]), "mesh": self.mesh}
+        if enc_out is not None:
+            ctx["enc_out"] = enc_out
+        x, _, aux = lm.apply_stack_full(cfg, self.specs, params["segments"],
+                                        x, ctx)
+        return self._lm_logits(params, x), aux
+
+    def _assemble_inputs(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch["tokens"])
+        enc_out = None
+        if cfg.family == "vlm":
+            pre = self._project_patches(params, batch["patches"])
+            x = jnp.concatenate([pre, x], axis=1)
+        if cfg.is_encdec:
+            enc_out = self.encode(params, batch["frames"])
+        if not cfg.use_rope:
+            x = add_abs_positions(x)
+        return x, enc_out
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        ce, n_tok = softmax_cross_entropy(
+            logits, batch["labels"], batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux, "n_tok": n_tok}
+
+    # ------------------------------------------------------------------
+    # Prefill → (last-token logits, caches)
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, capacity=None):
+        cfg = self.cfg
+        x, enc_out = self._assemble_inputs(params, batch)
+        S = x.shape[1]
+        ctx = {"mode": "full", "causal": True, "make_cache": True,
+               "capacity": capacity or S, "positions": jnp.arange(S),
+               "mesh": self.mesh}
+        if enc_out is not None:
+            ctx["enc_out"] = enc_out
+        x, caches, _ = lm.apply_stack_full(cfg, self.specs,
+                                           params["segments"], x, ctx)
+        logits = self._lm_logits(params, x[:, -1:])[:, 0]
+        return logits, caches
+
+    # ------------------------------------------------------------------
+    # Decode: one token against caches
+    # ------------------------------------------------------------------
+    def decode(self, params, caches, token, pos):
+        """token (B,1) int32; pos scalar int32 → (logits (B,V), caches')."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, token)
+        if not cfg.use_rope:
+            x = x + abs_position_vector(pos, cfg.d_model).astype(x.dtype)
+        ctx = {"mode": "decode", "pos": pos, "mesh": self.mesh}
+        x, caches = lm.apply_stack_decode(cfg, self.specs,
+                                          params["segments"], x, caches, ctx)
+        return self._lm_logits(params, x[:, -1:])[:, 0], caches
+
+    def init_cache(self, batch_size, capacity):
+        enc_len = self.cfg.encoder.seq_len if self.cfg.is_encdec else 0
+        return lm.init_stack_cache(self.cfg, self.specs, batch_size,
+                                   capacity, enc_len=enc_len)
+
+    # ------------------------------------------------------------------
+    # Input specs (ShapeDtypeStruct stand-ins for the dry-run)
+    # ------------------------------------------------------------------
+    def input_specs(self, cell):
+        """→ batch dict of ShapeDtypeStruct for the given ShapeCell."""
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        f32 = jnp.float32
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if cell.kind == "decode":
+            return {"token": sds((B, 1), i32)}
+        batch = {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.frontend.n_tokens
+            batch["patches"] = sds((B, cfg.frontend.n_tokens,
+                                    cfg.frontend.d_in), f32)
+        if cfg.is_encdec:
+            batch["frames"] = sds((B, cfg.frontend.n_tokens,
+                                   cfg.frontend.d_in), f32)
+        batch["tokens"] = sds((B, s_text), i32)
+        if cell.kind == "train":
+            batch["labels"] = sds((B, S), i32)
+            batch["mask"] = sds((B, S), f32)
+        return batch
+
+
+def build_model(cfg, mesh=None) -> Model:
+    return Model(cfg, mesh=mesh)

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (OptConfig, global_norm, init,
+                               make_train_step, schedule, update)
+
+__all__ = ["OptConfig", "global_norm", "init", "make_train_step",
+           "schedule", "update"]

@@ -1,0 +1,8 @@
+from repro.parallel.partition import (batch_axes, batch_pspecs, cache_pspecs,
+                                      opt_pspecs, param_pspecs, shardings)
+from repro.parallel.steps import (build_decode, build_prefill,
+                                  build_step_for_cell, build_train)
+
+__all__ = ["batch_axes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
+           "param_pspecs", "shardings", "build_decode", "build_prefill",
+           "build_step_for_cell", "build_train"]

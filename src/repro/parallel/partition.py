@@ -1,0 +1,237 @@
+"""Logical→mesh sharding rules (DP / TP / EP / FSDP / SP).
+
+Mesh axes: ("pod",)? + ("data", "model").
+
+* batch                   → ("pod","data")  (DP)
+* attention q-heads, d_ff,
+  padded vocab, rwkv heads → "model"        (TP, Megatron layout)
+* experts                 → "model"         (EP; kimi 384/16 = 24 per chip)
+* expert d_ff             → "data"          (2-D expert sharding, kimi)
+* params' d_model row     → "data"          (FSDP/ZeRO-3 when profile asks)
+* decode KV cache         → batch→DP; heads→"model" when divisible, else the
+  cache *sequence* dim shards over "model" (split-KV / flash-decoding
+  style: local partial softmax + tiny cross-shard reductions)
+* B=1 long-context decode → cache sequence over ("data","model") (SP)
+
+Divisibility: explicit pjit in_shardings must divide exactly, so every
+proposed spec passes through ``_sanitize`` which drops axes that do not
+divide the dimension (the fallback is replication of that dim — e.g.
+recurrentgemma's 10 q-heads on a 16-wide model axis leave attention
+replicated while RG-LRU/FFN carry the TP; recorded as a known baseline
+cost in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+POD, DATA, MODEL = "pod", "data", "model"
+
+
+def batch_axes(mesh):
+    return (POD, DATA) if POD in mesh.axis_names else (DATA,)
+
+
+def mesh_sizes(mesh):
+    return {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def _sanitize(spec, shape, sizes):
+    """Drop axes whose product does not divide the dim size."""
+    out = []
+    for d, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        out.append(ax if shape[d] % total == 0 else None)
+    return tuple(out)
+
+
+def _path_names(path):
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(int(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _scan_segment_indices(cfg):
+    from repro.models.lm import build_layout, layer_specs
+    specs = layer_specs(cfg, cross=cfg.is_encdec)
+    lay = build_layout(cfg, specs)
+    return {i for i, e in enumerate(lay) if e[0] == "scan"}
+
+
+def _enc_scan_indices(cfg):
+    from repro.models.lm import LayerSpec, build_layout
+    specs = tuple(LayerSpec("attn", "gelu", cfg.d_ff, False)
+                  for _ in range(cfg.encoder.n_layers))
+    lay = build_layout(cfg, specs)
+    return {i for i, e in enumerate(lay) if e[0] == "scan"}
+
+
+def _leaf_rule(cfg, names, shape, sizes):
+    """Proposed sharding (pre-sanitize) for an unstacked leaf."""
+    name = str(names[-1])
+    nd = len(shape)
+    prof = cfg.sharding
+    size = int(np.prod(shape)) if shape else 1
+    fsdp = DATA if (prof.fsdp_params and size >= prof.fsdp_min_size) else None
+    group = [str(n) for n in names]
+
+    # ---- embeddings / head -------------------------------------------------
+    if name == "tok_embed":
+        return (MODEL, fsdp)
+    if name == "lm_head":
+        return (fsdp, MODEL)
+    if name == "enc_proj":
+        return (None, MODEL)
+    if "projector" in group:
+        return (None, MODEL) if name == "w1" else (MODEL, None)
+
+    # ---- MoE (expert-stacked, ndim 3) --------------------------------------
+    if name == "router":
+        return (None, None)
+    if "shared" in group:           # shared expert: small, replicated
+        return tuple(None for _ in shape)
+    if nd == 3 and name in ("w_gate", "w_up", "w_down") \
+            and "shared" not in group:
+        tp = sizes.get(MODEL, 1)
+        if shape[0] % tp == 0:                    # many experts → EP
+            ed = DATA if prof.shard_experts_data else None
+            if name == "w_down":                  # (E, d_e, d)
+                return (MODEL, ed, None)
+            return (MODEL, None, ed)              # (E, d, d_e)
+        # few big experts (E < tp) → expert-TP: shard d_e over model
+        if name == "w_down":
+            return (None, MODEL, None)
+        return (None, None, MODEL)
+
+    # ---- attention ----------------------------------------------------------
+    if name == "wq":                              # (d, Hq, hd)
+        return (fsdp, MODEL, None)
+    if name in ("wk", "wv"):                      # (d, Hkv, hd)
+        return (fsdp, MODEL, None)                # sanitized→repl. if kv<tp
+    if name == "wo":                              # (Hq, hd, d)
+        return (MODEL, None, fsdp)
+    if name == "bq":
+        return (MODEL, None)
+    if name in ("bk", "bv"):
+        return (MODEL, None)
+
+    # ---- dense FFN / RG-LRU / RWKV projections -------------------------------
+    if name in ("w_gate", "w_up", "w_x", "w_g", "w_r", "w_k", "w_v"):
+        return (fsdp, MODEL)                      # (d, ff|d)
+    if name in ("w_down", "w_o"):                 # (ff|d, d)
+        return (MODEL, fsdp)
+    if name == "b_up":
+        return (MODEL,)
+    if name == "b_down":
+        return (None,)
+    if name == "conv_w":                          # (4, d)
+        return (None, MODEL)
+    if name in ("conv_b", "lam", "ln_scale", "ln_bias"):
+        return (MODEL,)
+    if name in ("w_ra", "w_ix"):                  # (H, dh, dh) small → repl.
+        return (None, None, None)
+    if name == "bonus_u":                         # (H, dk)
+        return (MODEL, None)
+
+    # ---- norms / lora mixes / everything else: replicated --------------------
+    return tuple(None for _ in shape)
+
+
+def param_pspecs(cfg, params, mesh):
+    """PartitionSpec pytree matching ``params`` (arrays or SDS)."""
+    sizes = mesh_sizes(mesh)
+    scan_idx = _scan_segment_indices(cfg)
+    enc_scan = _enc_scan_indices(cfg) if cfg.is_encdec else set()
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        scanned = False
+        if "segments" in names:
+            si = names[names.index("segments") + 1]
+            inside_enc = "encoder" in names[:names.index("segments")]
+            scanned = si in (enc_scan if inside_enc else scan_idx)
+        shape = leaf.shape
+        base = shape[1:] if scanned else shape
+        spec = _sanitize(_leaf_rule(cfg, names, base, sizes), base, sizes)
+        if scanned:
+            spec = (None,) + tuple(spec)
+        assert len(spec) == len(shape), (names, shape, spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_pspecs(cfg, param_specs):
+    """Optimizer state mirrors parameter sharding; step is replicated."""
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def batch_pspecs(cfg, batch, mesh):
+    ba = batch_axes(mesh)
+    sizes = mesh_sizes(mesh)
+    dp = int(np.prod([sizes[a] for a in ba]))
+
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp != 0:     # e.g. B=1 long-context
+            return P(*((None,) * leaf.ndim))
+        return P(*((ba,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_pspecs(cfg, caches, mesh, batch_size):
+    sizes = mesh_sizes(mesh)
+    ba = batch_axes(mesh)
+    dp = int(np.prod([sizes[a] for a in ba]))
+    tp = sizes[MODEL]
+    bdp = ba if batch_size % dp == 0 else None
+    scan_idx = _scan_segment_indices(cfg)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        scanned = bool(names) and isinstance(names[0], int) \
+            and names[0] in scan_idx
+        shape = leaf.shape[1:] if scanned else leaf.shape
+        name = str(names[-1])
+        if name in ("k", "v"):                    # (B, C, Hkv, hd)
+            H = shape[2]
+            if H % tp == 0:
+                spec = (bdp, None, MODEL, None)
+            elif bdp is not None:
+                spec = (bdp, MODEL, None, None)   # split-KV over model
+            else:
+                spec = (None, (DATA, MODEL), None, None)  # B=1 long ctx SP
+        elif name == "s":                          # rwkv state (B,H,K,V)
+            spec = (bdp, MODEL, None, None)
+        elif name in ("shift", "h"):               # (B, d)
+            spec = (bdp, MODEL)
+        elif name == "conv":                       # (B, 3, d)
+            spec = (bdp, None, MODEL)
+        else:
+            spec = tuple(None for _ in shape)
+        spec = _sanitize(spec, shape, sizes)
+        if scanned:
+            spec = (None,) + tuple(spec)
+        assert len(spec) == len(leaf.shape), (names, leaf.shape, spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, caches)
+
+
+def shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,130 @@
+"""Step builders: assemble (model × optimizer × sharding × mesh) into
+AOT-lowerable pjit functions for train / prefill / decode.
+
+Used by launch/dryrun.py (AOT ShapeDtypeStruct path), launch/train.py and
+the virtualization compile service (core/reconfig.py) — the same builders
+serve native and virtualized execution, which is the paper's *fidelity*
+criterion at work.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.models import build_model
+from repro.parallel.partition import (batch_axes, batch_pspecs, cache_pspecs,
+                                      opt_pspecs, param_pspecs, shardings)
+
+
+def abstract_params(model, dtype_override=None):
+    abs_p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if dtype_override is not None:
+        dt = jnp.dtype(dtype_override)
+
+        def conv(x):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(x.shape, dt)
+            return x
+
+        abs_p = jax.tree.map(conv, abs_p)
+    return abs_p
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_train(cfg, mesh, cell, opt_cfg=None):
+    """→ (jitted_train_step, abstract_args tuple)."""
+    opt_cfg = opt_cfg or optim.OptConfig(
+        state_dtype=cfg.opt_dtype)
+    model = build_model(cfg, mesh=mesh)
+    params_abs = abstract_params(model)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    opt_abs = jax.eval_shape(partial(optim.init, opt_cfg), params_abs)
+    o_specs = opt_pspecs(cfg, p_specs)
+    batch_abs = model.input_specs(cell)
+    b_specs = batch_pspecs(cfg, batch_abs, mesh)
+
+    step_fn = optim.make_train_step(model, opt_cfg)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(shardings(mesh, p_specs), shardings(mesh, o_specs),
+                      shardings(mesh, b_specs)),
+        out_shardings=(shardings(mesh, p_specs), shardings(mesh, o_specs),
+                       None),
+        donate_argnums=(0, 1))
+    return jitted, (params_abs, opt_abs, batch_abs)
+
+
+def build_prefill(cfg, mesh, cell):
+    """→ (jitted_prefill, abstract_args). prefill(params, batch) →
+    (last_logits, caches)."""
+    model = build_model(cfg, mesh=mesh)
+    params_abs = abstract_params(model, dtype_override="bfloat16")
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    batch_abs = model.input_specs(cell)
+    b_specs = batch_pspecs(cfg, batch_abs, mesh)
+    cap = cell.seq_len
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, capacity=cap)
+
+    cache_abs = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, capacity=cap)[1],
+        params_abs, batch_abs)
+    c_specs = cache_pspecs(cfg, cache_abs, mesh, cell.global_batch)
+    ba = batch_axes(mesh)
+    logits_spec = P(ba, "model")
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(shardings(mesh, p_specs), shardings(mesh, b_specs)),
+        out_shardings=(shardings(mesh, logits_spec),
+                       shardings(mesh, c_specs)))
+    return jitted, (params_abs, batch_abs)
+
+
+def build_decode(cfg, mesh, cell):
+    """→ (jitted_decode, abstract_args). decode(params, caches, token, pos)
+    → (logits, caches'). Caches donated (in-place ring update)."""
+    model = build_model(cfg, mesh=mesh)
+    B = cell.global_batch
+    params_abs = abstract_params(model, dtype_override="bfloat16")
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    cache_abs = jax.eval_shape(
+        partial(model.init_cache, B, cell.seq_len))
+    c_specs = cache_pspecs(cfg, cache_abs, mesh, B)
+    token_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    ba = batch_axes(mesh)
+    import numpy as np
+    dp = int(np.prod([mesh.shape[a] for a in ba]))
+    tok_spec = P(ba, None) if B % dp == 0 else P(None, None)
+    logits_spec = (P(ba, "model") if B % dp == 0 else P(None, "model"))
+
+    def decode_step(params, caches, token, pos):
+        return model.decode(params, caches, token, pos)
+
+    jitted = jax.jit(
+        decode_step,
+        in_shardings=(shardings(mesh, p_specs), shardings(mesh, c_specs),
+                      shardings(mesh, tok_spec), shardings(mesh, P())),
+        out_shardings=(shardings(mesh, logits_spec),
+                       shardings(mesh, c_specs)),
+        donate_argnums=(1,))
+    return jitted, (params_abs, cache_abs, token_abs, pos_abs)
+
+
+def build_step_for_cell(cfg, mesh, cell, opt_cfg=None):
+    """Dispatch on the cell kind — the dry-run entry point."""
+    if cell.kind == "train":
+        return build_train(cfg, mesh, cell, opt_cfg)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, mesh, cell)
+    if cell.kind == "decode":
+        return build_decode(cfg, mesh, cell)
+    raise ValueError(cell.kind)

@@ -1,0 +1,127 @@
+"""Batched serving engine: prefill + decode loop with a KV-cache slot pool.
+
+The engine is deliberately runtime-agnostic: it takes *callables* for
+prefill/decode, so the same engine runs
+
+* natively  (direct jit'd functions), or
+* virtualized (functions routed through the VMM — the paper's FEV/hybrid
+  data plane), which is how benchmarks/fig6a measures virtualization
+  overhead for serving.
+
+Request flow: submit() → waiting queue → admit into fixed batch slots →
+prefill (padded batch) → greedy/temperature decode until EOS/max — a
+static-batching engine with slot re-admission (continuous batching lite).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 → greedy
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, batch_size: int, capacity: int,
+                 prefill_fn: Callable, decode_fn: Callable,
+                 extra_batch: Optional[dict] = None, eos_id: int = -1,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.B = batch_size
+        self.capacity = capacity
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.extra_batch = extra_batch or {}
+        self.eos_id = eos_id
+        self.rng = np.random.default_rng(seed)
+        self._rid = 0
+        self.waiting: "queue.Queue[Request]" = queue.Queue()
+        self.completed: dict = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt_tokens, max_new_tokens=16, temperature=0.0):
+        with self._lock:
+            rid = self._rid
+            self._rid += 1
+        req = Request(rid, np.asarray(prompt_tokens, np.int32),
+                      max_new_tokens, temperature)
+        self.waiting.put(req)
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> List[Request]:
+        batch = []
+        while len(batch) < self.B and not self.waiting.empty():
+            batch.append(self.waiting.get())
+        return batch
+
+    def _pad_prompts(self, reqs):
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        return toks, S
+
+    # ------------------------------------------------------------------
+    def run_round(self, params):
+        """Serve one admitted batch to completion. Returns finished reqs."""
+        reqs = self._admit()
+        if not reqs:
+            return []
+        toks, S = self._pad_prompts(reqs)
+        batch = {"tokens": jnp.asarray(toks), **self.extra_batch}
+        logits, caches = self.prefill_fn(params, batch)
+        logits = np.asarray(jax.device_get(logits), np.float32)
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        pos = S
+        active = np.ones(self.B, bool)
+        active[len(reqs):] = False
+        for step in range(max_new):
+            nxt = self._sample(logits, reqs)
+            for i, r in enumerate(reqs):
+                if active[i] and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(nxt[i]))
+                    if nxt[i] == self.eos_id or \
+                            len(r.out_tokens) >= r.max_new_tokens:
+                        active[i] = False
+            if not active.any():
+                break
+            token = jnp.asarray(nxt.reshape(self.B, 1).astype(np.int32))
+            logits, caches = self.decode_fn(params, caches, token,
+                                            jnp.int32(pos))
+            logits = np.asarray(jax.device_get(logits), np.float32)
+            pos += 1
+
+        for r in reqs:
+            r.done = True
+            self.completed[r.rid] = r
+        return reqs
+
+    def _sample(self, logits, reqs):
+        V = self.cfg.vocab
+        lg = logits[:, :V]
+        out = np.zeros(logits.shape[0], np.int64)
+        for i in range(logits.shape[0]):
+            t = reqs[i].temperature if i < len(reqs) else 0.0
+            if t <= 0.0:
+                out[i] = int(np.argmax(lg[i]))
+            else:
+                p = np.exp((lg[i] - lg[i].max()) / t)
+                p /= p.sum()
+                out[i] = int(self.rng.choice(V, p=p))
+        return out

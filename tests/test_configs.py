@@ -1,0 +1,79 @@
+"""Config registry: exact assigned dims, analytic param counts vs the
+published sizes, shape-cell applicability (documented long_500k skips)."""
+import pytest
+
+from repro.configs import (LONG_500K, applicable_shapes, get_config,
+                           list_archs)
+
+ASSIGNED = {
+    "whisper-medium": dict(L=24, d=1024, H=16, kv=16, ff=4096, v=51865),
+    "internlm2-1.8b": dict(L=24, d=2048, H=16, kv=8, ff=8192, v=92544),
+    "qwen1.5-0.5b": dict(L=24, d=1024, H=16, kv=16, ff=2816, v=151936),
+    "phi3-mini-3.8b": dict(L=32, d=3072, H=32, kv=32, ff=8192, v=32064),
+    "starcoder2-15b": dict(L=40, d=6144, H=48, kv=4, ff=24576, v=49152),
+    "recurrentgemma-2b": dict(L=26, d=2560, H=10, kv=1, ff=7680, v=256000),
+    "rwkv6-7b": dict(L=32, d=4096, H=64, kv=64, ff=14336, v=65536),
+    "internvl2-2b": dict(L=24, d=2048, H=16, kv=8, ff=8192, v=92553),
+    "kimi-k2-1t-a32b": dict(L=61, d=7168, H=64, kv=8, ff=2048, v=163840),
+    "mixtral-8x7b": dict(L=32, d=4096, H=32, kv=8, ff=14336, v=32000),
+}
+
+# published parameter totals (billions); active for MoE
+PUBLISHED = {
+    "whisper-medium": (0.769, None), "internlm2-1.8b": (1.89, None),
+    "qwen1.5-0.5b": (0.62, None), "phi3-mini-3.8b": (3.82, None),
+    "starcoder2-15b": (15.5, None), "recurrentgemma-2b": (2.7, None),
+    "rwkv6-7b": (7.6, None), "internvl2-2b": (1.9, None),
+    "kimi-k2-1t-a32b": (1000.0, 32.0), "mixtral-8x7b": (46.7, 12.9),
+}
+
+
+def test_registry_has_all_ten():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_dims_exact(arch):
+    a = ASSIGNED[arch]
+    c = get_config(arch)
+    assert c.n_layers == a["L"]
+    assert c.d_model == a["d"]
+    assert c.n_heads == a["H"]
+    assert c.n_kv_heads == a["kv"]
+    assert c.vocab == a["v"]
+    if c.ffn_kind == "moe":
+        assert c.moe.d_expert == a["ff"]
+    else:
+        assert c.d_ff == a["ff"]
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED))
+def test_param_counts_match_published(arch):
+    total, active = PUBLISHED[arch]
+    pc = get_config(arch).param_counts()
+    assert abs(pc["total"] / 1e9 - total) / total < 0.25, pc
+    if active is not None:
+        assert abs(pc["active"] / 1e9 - active) / active < 0.25, pc
+
+
+def test_long_context_skip_rule():
+    runs_500k = {a for a in list_archs()
+                 if LONG_500K in applicable_shapes(get_config(a))}
+    assert runs_500k == {"recurrentgemma-2b", "rwkv6-7b", "mixtral-8x7b"}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_padded_vocab_divisibility(arch):
+    c = get_config(arch)
+    assert c.padded_vocab % 256 == 0
+    assert c.padded_vocab >= c.vocab
+    assert c.padded_vocab - c.vocab < 256
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_configs_same_family(arch):
+    full, red = get_config(arch), get_config(arch, reduced=True)
+    assert full.family == red.family
+    assert full.block_pattern == red.block_pattern
+    assert full.ffn_kind == red.ffn_kind
+    assert (full.moe is None) == (red.moe is None)

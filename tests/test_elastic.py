@@ -1,0 +1,112 @@
+"""Elasticity: grow/shrink a tenant slice, defragmentation re-packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import VMM
+from repro.core import elastic
+from repro.core.vslice import Floorplanner
+
+
+def fake_vmm(tmp_path, rows=4, cols=4):
+    """VMM over a fake device grid (no program loads in these tests)."""
+    class FakeDev:
+        def __init__(self, i):
+            self.id = i
+
+    vmm = VMM.__new__(VMM)
+    import threading
+    import queue
+    from repro.core.interposition import OpLog, TenantCheckpointer
+    from repro.core.isolation import IsolationAuditor
+    from repro.core.reconfig import CompileService, ProgramLoader
+    from repro.core.shell import TransferEngine
+
+    grid = np.array([FakeDev(i) for i in range(rows * cols)]).reshape(
+        rows, cols)
+    fp = Floorplanner.__new__(Floorplanner)
+    fp.grid = grid
+    fp.rows, fp.cols = rows, cols
+    fp.occupancy = np.zeros((rows, cols), dtype=bool)
+    fp.slices = {}
+    fp._next_id = 0
+    fp._lock = threading.Lock()
+
+    vmm.policy = "hybrid"
+    vmm.mmu_backend = "bitmap"
+    vmm.hbm_per_chip = 1 << 24
+    vmm.segment_bytes = 1 << 20
+    vmm.floorplanner = fp
+    vmm.auditor = IsolationAuditor()
+    vmm.oplog = OpLog()
+    vmm.transfer = TransferEngine()
+    vmm.compiler = CompileService(step_builder=lambda *a: (None, ()))
+    vmm.loader = ProgramLoader()
+    vmm.checkpointer = TenantCheckpointer(str(tmp_path / "ck"))
+    vmm.tenants = {}
+    vmm.straggler_factor = 4.0
+    vmm._ewma = {}
+    vmm._lock = threading.Lock()
+    vmm._queues = {}
+    vmm._broker_stop = threading.Event()
+    vmm._broker = None
+    return vmm
+
+
+def _patch_mesh(monkeypatch):
+    """VSlice builds a jax Mesh from fake devices — stub it out."""
+    import repro.core.vslice as vs_mod
+    monkeypatch.setattr(vs_mod, "Mesh",
+                        lambda devices, axes: ("fake-mesh", axes))
+
+
+def test_resize_grow_and_shrink(tmp_path, monkeypatch):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 2))
+    assert t.vslice.spec.shape == (1, 2)
+    elastic.resize(vmm, t, (2, 4))
+    assert t.vslice.spec.shape == (2, 4)
+    assert vmm.floorplanner.utilization() == 8 / 16
+    elastic.resize(vmm, t, (1, 1))
+    assert t.vslice.spec.shape == (1, 1)
+    assert len(vmm.oplog.query(op="migrate")) == 2
+
+
+def test_resize_impossible_rolls_back(tmp_path, monkeypatch):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (2, 2))
+    from repro.core import AdmissionError
+    with pytest.raises(AdmissionError):
+        elastic.resize(vmm, t, (8, 8))       # bigger than the grid
+    assert t.vslice.spec.shape == (2, 2)     # rolled back intact
+    assert vmm.floorplanner.utilization() == 4 / 16
+
+
+def test_defragment_packs_toward_origin(tmp_path, monkeypatch):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    a = vmm.create_vm("a", (1, 2))
+    b = vmm.create_vm("b", (1, 2))
+    c = vmm.create_vm("c", (2, 2))
+    vmm.destroy_vm("a")                      # hole at the origin
+    frag_before = vmm.floorplanner.fragmentation()
+    moves = elastic.defragment(vmm)
+    assert moves >= 1
+    origins = sorted(t.vslice.spec.origin for t in vmm.tenants.values())
+    assert origins[0] == (0, 0)              # packed to origin
+    assert vmm.floorplanner.fragmentation() <= frag_before
+
+
+def test_multiplexing_capacity(tmp_path, monkeypatch):
+    """Space multiplexing: the 4×4 grid hosts 8 tenants of (1,2)."""
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    tenants = [vmm.create_vm(f"t{i}", (1, 2)) for i in range(8)]
+    assert vmm.floorplanner.utilization() == 1.0
+    from repro.core import AdmissionError
+    with pytest.raises(AdmissionError):
+        vmm.create_vm("overflow", (1, 1))

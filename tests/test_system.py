@@ -1,0 +1,49 @@
+"""End-to-end behaviour tests for the virtualization system: the paper's
+§IV scenario on the CPU sim — a tenant gets a vFPGA-like slice, keeps its
+native design flow (fidelity), the VMM mediates the control plane, and
+the five criteria are all observable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import VMM, ProgramRequest, report
+from repro.core.lm_layout_check import verify_layouts   # noqa: F401  (import check)
+
+
+def test_paper_scenario_end_to_end(tmp_path):
+    """Figure-2 scenario: user owns a vFPGA (slice), compiles with the
+    normal flow, runs an accelerated app, reads results back; the VMM
+    logs everything and the criteria report reflects it."""
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    vmm = VMM(Mesh(devs, ("data", "model")), policy="hybrid",
+              hbm_per_chip=1 << 28, segment_bytes=1 << 20,
+              ckpt_root=str(tmp_path))
+    tenant = vmm.create_vm("user0", (1, 1), hbm_quota_bytes=128 << 20)
+    dev = tenant.device
+    dev.open()
+
+    # the paper's matrix-multiplication app through the guest API
+    from repro.kernels.matmul.ops import matmul_op
+    h_in = dev.alloc(2 * 256 * 256 * 4, (2, 256, 256), "float32")
+    a = np.random.randn(256, 256).astype(np.float32)
+    b = np.random.randn(256, 256).astype(np.float32)
+    dev.write(h_in, np.stack([a, b]))
+
+    tenant.program = lambda ab: matmul_op(ab[0], ab[1])
+    buf = tenant.buffers[h_in].device_array
+    result = dev.run(buf)
+    np.testing.assert_allclose(np.asarray(result), a @ b, atol=1e-3)
+
+    # criteria observable
+    rep = report(vmm, perf_ratio=1.0, same_artifact=True)
+    assert rep.tenants == 1
+    assert rep.oplog_records >= 4
+    assert rep.isolation_violations == {}    # benign run: zero denials
+    dev.close()
+    vmm.shutdown()
+
+
+def test_layer_layouts_all_archs():
+    verify_layouts()

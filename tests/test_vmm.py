@@ -1,0 +1,188 @@
+"""VMM tests: policies, mediated ops, straggler detection, quiesce,
+checkpoint/restore/migrate (interposition), elasticity, criteria report."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (VMM, AdmissionError, IsolationViolation,
+                        ProgramRequest, QuotaExceeded, report)
+from repro.core import elastic
+from repro.core.vmm import IRQ_DEGRADED
+
+
+def mk_vmm(tmp_path, policy="hybrid", rows=1, cols=1):
+    devs = np.array([jax.devices()[0]] * (rows * cols)).reshape(rows, cols) \
+        if rows * cols == 1 else None
+    assert rows * cols == 1, "CPU sim: 1 real device"
+    mesh = Mesh(devs, ("data", "model"))
+    return VMM(mesh, policy=policy, hbm_per_chip=1 << 28,
+               segment_bytes=1 << 20, ckpt_root=str(tmp_path / "ckpt"))
+
+
+@pytest.mark.parametrize("policy", ["fev", "bev", "hybrid"])
+def test_guest_device_full_lifecycle(tmp_path, policy):
+    vmm = mk_vmm(tmp_path, policy)
+    t = vmm.create_vm("alice", (1, 1), hbm_quota_bytes=32 << 20)
+    dev = t.device
+    dev.open()
+    info = dev.get_info()
+    assert info["slice_shape"] == (1, 1) and info["policy"] == policy
+    h = dev.alloc(1 << 20, shape=(512, 512), dtype="float32")
+    x = np.random.randn(512, 512).astype(np.float32)
+    dev.write(h, x)
+    np.testing.assert_array_equal(dev.read(h), x)
+    # over-quota + oversized write
+    with pytest.raises(QuotaExceeded):
+        dev.alloc(1 << 30)
+    with pytest.raises(IsolationViolation):
+        dev.write(h, np.zeros((1024, 1024), np.float32))
+    dev.free(h)
+    dev.close()
+    vmm.destroy_vm("alice")
+    assert vmm.floorplanner.utilization() == 0.0
+    vmm.shutdown()
+
+
+def test_run_without_program_rejected(tmp_path):
+    vmm = mk_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    from repro.core import LegalityError
+    with pytest.raises(LegalityError):
+        t.device.run()
+    vmm.shutdown()
+
+
+def test_reprogram_and_run_real_program(tmp_path):
+    vmm = mk_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    req = ProgramRequest("qwen1.5-0.5b", "decode", 32, 2)
+    prog = t.device.reprogram(req)
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          prog.bitfile.abstract_args[0])
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          prog.bitfile.abstract_args[1])
+    logits, _ = t.device.run(params, caches, jnp.zeros((2, 1), jnp.int32),
+                             jnp.int32(3))
+    assert logits.shape[0] == 2
+    # warm reconfig
+    t.device.reprogram(req)
+    assert vmm.compiler.hits == 1
+    vmm.shutdown()
+
+
+def test_fev_broker_serializes_two_tenants(tmp_path):
+    vmm = mk_vmm(tmp_path, policy="fev")
+    # two tenants on a 1×1 grid is impossible → use two handles on one?
+    # → instead verify the broker round-trips data ops + op log complete
+    t = vmm.create_vm("a", (1, 1))
+    h = t.device.alloc(1 << 20, (128,), "float32")
+    for i in range(5):
+        t.device.write(h, np.full((128,), i, np.float32))
+        assert vmm.oplog.completeness() == 1.0
+    assert len(vmm.oplog.query(op="write")) == 5
+    vmm.shutdown()
+
+
+def test_straggler_detection(tmp_path):
+    vmm = mk_vmm(tmp_path)
+    vmm.straggler_factor = 3.0
+    t = vmm.create_vm("a", (1, 1))
+    events = []
+    t.device.set_status(lambda ev: events.append(ev.kind))
+
+    class SlowProg:
+        def __init__(self):
+            self.n = 0
+
+        def __call__(self):
+            self.n += 1
+            time.sleep(0.2 if self.n == 5 else 0.01)
+            return self.n
+
+    t.program = SlowProg()
+    for _ in range(5):
+        t.device.run()
+    assert t.straggler_count >= 1
+    assert "straggler" in events
+    vmm.shutdown()
+
+
+def test_checkpoint_restore_roundtrip(tmp_path):
+    vmm = mk_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "step_arr": jnp.int32(7)}
+    t.state = state
+    t.step = 7
+    vmm.checkpoint_tenant(t)
+    t.state = {}
+    template = {"params": {"w": jnp.zeros((3, 4))},
+                "step_arr": jnp.int32(0)}
+    vmm.restore_tenant(t, template)
+    np.testing.assert_array_equal(np.asarray(t.state["params"]["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+    assert t.step == 7
+    vmm.shutdown()
+
+
+def test_slice_failure_and_migration(tmp_path):
+    """Node-failure path: mark slice bad → migrate → tenant keeps running
+    (fault-tolerance requirement)."""
+    vmm = mk_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    t.state = {"w": jnp.ones((4,))}
+    events = []
+    t.device.set_status(lambda ev: events.append(ev.kind))
+    old_fp = t.vslice.fingerprint
+    vmm.mark_slice_failed(t.vslice.slice_id)
+    assert not t.vslice.healthy
+    assert "slice_failed" in events
+    vmm.migrate_tenant(t, state_template={"w": jnp.zeros((4,))})
+    assert t.vslice.healthy
+    np.testing.assert_array_equal(np.asarray(t.state["w"]), np.ones(4))
+    assert len(vmm.oplog.query(op="migrate")) == 1
+    vmm.shutdown()
+
+
+def test_quiesce_blocks_data_plane(tmp_path):
+    import threading
+    vmm = mk_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    t.program = lambda: "ok"
+    order = []
+    with t.quiesce():
+        th = threading.Thread(
+            target=lambda: (t.device.run(), order.append("ran")))
+        th.start()
+        time.sleep(0.05)
+        assert order == []          # blocked while frozen
+        order.append("frozen")
+    th.join(timeout=2)
+    assert order == ["frozen", "ran"]
+    vmm.shutdown()
+
+
+def test_criteria_report(tmp_path):
+    vmm = mk_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    d = t.device
+    d.open()
+    d.get_info()
+    d.set_irq(lambda ev: None)
+    d.set_status(lambda ev: None)
+    h = d.alloc(1 << 20, (4,), "float32")
+    d.write(h, np.zeros(4, np.float32))
+    d.read(h)
+    d.reprogram(ProgramRequest("qwen1.5-0.5b", "decode", 16, 1))
+    d.close()
+    rep = report(vmm, perf_ratio=1.02, same_artifact=True)
+    assert rep.fidelity_operator_coverage == 1.0    # all 8 MMD ops seen
+    assert rep.tenants == 1
+    assert rep.oplog_records > 0
+    md = rep.to_markdown()
+    assert "fidelity" in md and "1.020" in md
+    vmm.shutdown()

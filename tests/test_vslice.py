@@ -1,0 +1,93 @@
+"""Floorplanner (PRR-carving) tests: disjointness, bounds, reuse,
+fragmentation metric — unit + hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.vslice import Floorplanner, SliceSpec, VSlice
+
+
+class FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"d{self.id}"
+
+
+class FakeMesh:
+    def __init__(self, rows, cols):
+        self.devices = np.array(
+            [FakeDev(i) for i in range(rows * cols)]).reshape(rows, cols)
+
+
+def planner(rows=8, cols=8):
+    fp = Floorplanner.__new__(Floorplanner)
+    import threading
+    fp.grid = FakeMesh(rows, cols).devices
+    fp.rows, fp.cols = rows, cols
+    fp.occupancy = np.zeros((rows, cols), dtype=bool)
+    fp.slices = {}
+    fp._next_id = 0
+    fp._lock = threading.Lock()
+    return fp
+
+
+def test_allocate_free_cycle():
+    fp = planner(4, 4)
+    a = fp.allocate((2, 2))
+    b = fp.allocate((2, 2))
+    c = fp.allocate((4, 4))
+    assert c is None                       # full rows blocked
+    fp.free(a.slice_id)
+    fp.free(b.slice_id)
+    c = fp.allocate((4, 4))
+    assert c is not None and fp.utilization() == 1.0
+
+
+def test_slices_disjoint_devices():
+    fp = planner(4, 8)
+    ids = set()
+    for shape in [(2, 2), (2, 4), (1, 8), (2, 2)]:
+        vs = fp.allocate(shape)
+        assert vs is not None
+        dev_ids = {d.id for d in vs.devices.flatten()}
+        assert not (ids & dev_ids)
+        ids |= dev_ids
+
+
+def test_topology_key_and_fingerprint():
+    fp = planner(4, 4)
+    a = fp.allocate((2, 2))
+    b = fp.allocate((2, 2))
+    assert a.topology_key == b.topology_key == "2x2"
+    assert a.fingerprint != b.fingerprint      # different devices
+
+
+def test_fragmentation_metric():
+    fp = planner(4, 4)
+    assert fp.fragmentation() == 0.0
+    a = fp.allocate((1, 1))
+    fp.allocate((1, 1))
+    # checkerboard the grid a bit
+    fp.free(a.slice_id)
+    f = fp.fragmentation()
+    assert 0.0 <= f < 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 4), st.integers(1, 4)), min_size=1,
+    max_size=12))
+def test_property_disjoint_in_bounds(shapes):
+    fp = planner(6, 6)
+    seen = np.zeros((6, 6), dtype=int)
+    for sh in shapes:
+        vs = fp.allocate(sh)
+        if vs is None:
+            continue
+        (r, c), (h, w) = vs.spec.origin, vs.spec.shape
+        assert r + h <= 6 and c + w <= 6
+        seen[r:r + h, c:c + w] += 1
+    assert (seen <= 1).all()               # no double-booked chip
+    assert (seen.astype(bool) == fp.occupancy).all()
