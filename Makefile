@@ -1,0 +1,15 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke fairness bench
+
+test:            ## tier-1 verify
+	$(PY) -m pytest -x -q
+
+smoke: test fairness   ## tier-1 + scheduler-fairness quick check
+
+fairness:        ## WFQ vs broker vs passthrough share table (quick)
+	$(PY) benchmarks/scheduler_fairness.py --quick
+
+bench:           ## full benchmark harness (CSV)
+	$(PY) benchmarks/run.py

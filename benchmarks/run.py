@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV (harness contract). Modules:
   roofline          scale deliverable — per-cell roofline terms (from the
                     dry-run artifacts; run launch/dryrun.py first)
   arch_step         reduced-config per-arch step timing (regression guard)
+  scheduler_fairness  data-plane scheduler — tenant throughput shares
+                    under skewed offered load (WFQ vs broker vs hybrid)
 """
 from __future__ import annotations
 
@@ -20,10 +22,12 @@ def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     os.chdir(os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import (arch_step, criteria_report, fig6a_apps,
-                            fig6b_breakdown, micro, roofline)
+                            fig6b_breakdown, micro, roofline,
+                            scheduler_fairness)
     modules = [("fig6a", fig6a_apps), ("fig6b", fig6b_breakdown),
                ("micro", micro), ("criteria", criteria_report),
-               ("roofline", roofline), ("arch_step", arch_step)]
+               ("roofline", roofline), ("arch_step", arch_step),
+               ("sched_fair", scheduler_fairness)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:

@@ -2,8 +2,11 @@
 
 An 8-device "pod" (host-platform devices) is floorplanned into two
 vSlices; two tenants serve different architectures concurrently, each
-through its own GuestDevice. Includes the paper's cross-PRR reprogram
-attack (denied + audited) and a warm-reconfiguration cache hit.
+through its own GuestDevice, with the data plane mediated by the
+weighted-fair-queueing scheduler (alice weight 3, bob weight 1) and the
+decode loops driven through the async ``run_async`` futures API.
+Includes the paper's cross-PRR reprogram attack (denied + audited), a
+warm-reconfiguration cache hit, and the per-tenant scheduler stats.
 
 Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
 """
@@ -20,10 +23,10 @@ from repro.core import VMM, LegalityError, ProgramRequest, report  # noqa: E402
 from repro.launch.mesh import make_local_mesh     # noqa: E402
 
 mesh = make_local_mesh((2, 4))
-vmm = VMM(mesh, policy="hybrid", ckpt_root=tempfile.mkdtemp())
+vmm = VMM(mesh, policy="wfq", ckpt_root=tempfile.mkdtemp())
 
-alice = vmm.create_vm("alice", (1, 4))
-bob = vmm.create_vm("bob", (1, 4))
+alice = vmm.create_vm("alice", (1, 4), sched_weight=3.0)
+bob = vmm.create_vm("bob", (1, 4), sched_weight=1.0)
 print("floorplan:", vmm.floorplanner.snapshot())
 
 for tenant, arch in ((alice, "qwen1.5-0.5b"), (bob, "internlm2-1.8b")):
@@ -36,10 +39,11 @@ for tenant, arch in ((alice, "qwen1.5-0.5b"), (bob, "internlm2-1.8b")):
     token = jnp.ones((4, 1), jnp.int32)
     logits, caches = tenant.device.run(args[0], args[1], token,
                                        jnp.int32(0))
-    for pos in range(1, 6):   # short decode loop per tenant
+    for pos in range(1, 6):   # short decode loop, async submission
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        logits, caches = tenant.device.run(args[0], caches, nxt,
-                                           jnp.int32(pos))
+        fut = tenant.device.run_async(args[0], caches, nxt,
+                                      jnp.int32(pos))
+        logits, caches = fut.result(timeout=60)
     print(f"[{tenant.name}] served 6 tokens of {arch}; "
           f"logits {logits.shape}")
 
@@ -55,5 +59,10 @@ alice.device.reprogram(ProgramRequest(arch="qwen1.5-0.5b", kind="decode",
                                       seq_len=64, global_batch=4))
 print(f"compile cache: hits={vmm.compiler.hits} "
       f"misses={vmm.compiler.misses}")
+sched = vmm.stats()["scheduler"]
+for name, s in sched["tenants"].items():
+    print(f"[sched:{sched['policy']}] {name}: weight={s['weight']} "
+          f"completed={s['completed']} avg_wait={s['avg_wait_ms']:.2f}ms "
+          f"avg_service={s['avg_service_ms']:.2f}ms")
 print(report(vmm).to_markdown())
 vmm.shutdown()

@@ -1,0 +1,56 @@
+"""Shims for jax API drift so the runtime works on older jax releases.
+
+* ``shard_map`` — promoted to ``jax.shard_map`` (with ``check_vma``) in
+  newer jax; older releases only have
+  ``jax.experimental.shard_map.shard_map`` (with ``check_rep``).
+* ``set_mesh_ctx`` — newer jax exposes ``jax.set_mesh``; older
+  releases use the ``Mesh`` object itself as the resource-env context
+  manager.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                         # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+
+def set_mesh_ctx(mesh):
+    """Context manager making ``mesh`` the ambient mesh (no-op for
+    ``None``): ``jax.set_mesh`` on newer jax, the ``Mesh`` object
+    itself on older releases."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def element_block_spec(block_shape, index_map):
+    """BlockSpec whose index_map yields *element* offsets (overlapping
+    halo windows): ``pl.Element`` dims on newer jax, the ``Unblocked``
+    indexing mode on older releases."""
+    from jax.experimental import pallas as pl
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(n) for n in block_shape),
+                            index_map)
+    return pl.BlockSpec(block_shape, index_map,
+                        indexing_mode=pl.Unblocked())
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` on newer jax, ``TPUCompilerParams`` on
+    older releases — keyword surface is shared."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)

@@ -17,16 +17,22 @@ from repro.core.mmu import (HBM_PER_CHIP, SEGMENT_BYTES, IsolationViolation,
                             SegmentPool)
 from repro.core.reconfig import (Bitfile, CompileService, LegalityError,
                                  ProgramLoader, ProgramRequest)
+from repro.core.scheduler import (PRIORITY_HIGH, PRIORITY_LOW,
+                                  PRIORITY_NORMAL, BrokerPlane, DataPlane,
+                                  PassthroughPlane, WFQPlane,
+                                  make_data_plane)
 from repro.core.shell import CompletionQueue, TransferEngine
 from repro.core.tenant import GuestDevice, Tenant
 from repro.core.vmm import VMM, AdmissionError
 from repro.core.vslice import Floorplanner, SliceSpec, VSlice
 
 __all__ = [
-    "VMM", "AdmissionError", "Bitfile", "CompileService", "CompletionQueue",
-    "CriteriaReport", "Floorplanner", "GuestDevice", "HBM_PER_CHIP",
-    "IsolationViolation", "LegalityError", "MMUError", "OutOfMemory",
-    "ProgramLoader", "ProgramRequest", "QuotaExceeded", "SEGMENT_BYTES",
-    "SegmentPool", "SliceSpec", "Tenant", "TransferEngine", "VSlice",
-    "report",
+    "VMM", "AdmissionError", "Bitfile", "BrokerPlane", "CompileService",
+    "CompletionQueue", "CriteriaReport", "DataPlane", "Floorplanner",
+    "GuestDevice", "HBM_PER_CHIP", "IsolationViolation", "LegalityError",
+    "MMUError", "OutOfMemory", "PRIORITY_HIGH", "PRIORITY_LOW",
+    "PRIORITY_NORMAL", "PassthroughPlane", "ProgramLoader",
+    "ProgramRequest", "QuotaExceeded", "SEGMENT_BYTES", "SegmentPool",
+    "SliceSpec", "Tenant", "TransferEngine", "VSlice", "WFQPlane",
+    "make_data_plane", "report",
 ]

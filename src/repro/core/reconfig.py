@@ -117,7 +117,6 @@ class CompileService:
                                vslice.fingerprint, cached.compiled,
                                cached.abstract_args,
                                compile_seconds=0.0)
-        import contextlib
         from repro.configs import get_config
         from repro.configs.base import ShapeCell
         cfg = get_config(req.arch, reduced=req.reduced)
@@ -125,8 +124,8 @@ class CompileService:
                          req.kind)
         t0 = time.perf_counter()
         mesh = getattr(vslice, "mesh", None)
-        ctx = (jax.set_mesh(mesh) if mesh is not None
-               else contextlib.nullcontext())
+        from repro.compat import set_mesh_ctx
+        ctx = set_mesh_ctx(mesh)
         with ctx:
             jitted, abstract_args = self._build(cfg, mesh, cell)
             lowered = jitted.lower(*abstract_args)

@@ -1,0 +1,448 @@
+"""Data-plane scheduler subsystem — pluggable dispatch policies for the VMM.
+
+The paper's taxonomy (§III-B) distinguishes *where* the virtualization
+layer interposes on the data plane; this module turns that decision into
+a pluggable ``DataPlane`` object the VMM delegates every data-plane
+operator (``read``/``write``/``run``) to:
+
+* ``PassthroughPlane`` — back-end virtualization (``bev``) and the
+  paper's ``hybrid`` design: the caller's thread invokes the operator
+  directly. ``bev`` skips the op log entirely; ``hybrid`` records ops
+  through the (sampled) ``OpLog``. No queueing, no cross-tenant
+  scheduling — isolation relies on the slice boundary.
+* ``BrokerPlane`` — front-end virtualization (``fev``): every op is
+  enqueued to a single broker thread that round-robins one op per
+  tenant queue per sweep. Maximal interposition; serialization cost.
+* ``WFQPlane`` — weighted fair queueing on top of the FEV broker
+  model: per-tenant weights drive a virtual-time scheduler, priority
+  classes preempt (at op granularity), and optional per-tenant token
+  buckets cap offered op rate. This is the scheduler the multi-tenant
+  QoS roadmap items build on (cf. Mbongue et al.'s shared-FPGA
+  scheduling gap and SYNERGY's runtime-managed scheduling).
+
+All planes share one service path (:meth:`DataPlane._run_job`): op-log
+begin/end, the tenant quiesce protocol (``enter_op``/``exit_op``),
+straggler detection via a per-(tenant, op) EWMA deadline, and per-tenant
+scheduler statistics (queue depth, wait/service time, credit balance).
+Queued planes additionally raise ``IRQ_DEGRADED`` (``queue_buildup``)
+on a tenant's completion queue when its backlog stays above the high
+watermark for a sustained window.
+
+Submission is available in two forms on every plane:
+
+* ``execute(tenant, op, work, detail)`` — blocking; returns the op's
+  value or re-raises its exception (the historical ``VMM._data_op``
+  contract).
+* ``submit(tenant, op, work, detail) -> concurrent.futures.Future`` —
+  asynchronous; errors propagate through ``future.exception()`` /
+  ``future.result()``. The continuous-batching serve engine and the
+  fairness benchmark drive this path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+# IRQ sources (shared with the VMM; re-exported from repro.core.vmm for
+# backward compatibility).
+IRQ_DONE = 0
+IRQ_RECONFIG = 1
+IRQ_DEGRADED = 2
+
+# Priority classes: lower value = served first.
+PRIORITY_HIGH = 0
+PRIORITY_NORMAL = 1
+PRIORITY_LOW = 2
+
+
+@dataclass
+class TenantSchedStats:
+    """Per-tenant scheduler counters (all times in seconds)."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    queue_depth: int = 0
+    wait_s: float = 0.0
+    service_s: float = 0.0
+    stragglers: int = 0
+    credit: float = 0.0          # WFQ virtual time; 0 for other planes
+    weight: float = 1.0
+    priority: int = PRIORITY_NORMAL
+
+    def snapshot(self) -> dict:
+        done = max(self.completed + self.failed, 1)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "queue_depth": self.queue_depth,
+            "wait_s": self.wait_s,
+            "service_s": self.service_s,
+            "avg_wait_ms": 1e3 * self.wait_s / done,
+            "avg_service_ms": 1e3 * self.service_s / done,
+            "stragglers": self.stragglers,
+            "credit": self.credit,
+            "weight": self.weight,
+            "priority": self.priority,
+        }
+
+
+@dataclass
+class _Job:
+    tenant: object
+    op: str
+    work: Callable
+    detail: dict
+    future: Future
+    t_submit: float
+    seq: int = 0
+
+
+@dataclass
+class _TenantEntry:
+    tenant: object
+    stats: TenantSchedStats
+    q: deque = field(default_factory=deque)
+    weight: float = 1.0
+    priority: int = PRIORITY_NORMAL
+    vtime: float = 0.0                    # WFQ virtual finish time
+    rate_limit: float = 0.0               # ops/sec; 0 = unlimited
+    tokens: float = 0.0                   # token bucket for rate limiting
+    t_tokens: float = 0.0                 # last bucket refill
+    buildup_since: Optional[float] = None  # queue above watermark since
+    last_buildup_irq: float = 0.0
+
+
+class DataPlane:
+    """Base class: registration, the shared service path, stats, IRQs."""
+
+    name = "base"
+
+    def __init__(self, oplog=None, straggler_factor: float = 4.0,
+                 log_ops: bool = True, queue_high_watermark: int = 64,
+                 queue_buildup_s: float = 0.25,
+                 queue_irq_cooldown_s: float = 1.0):
+        self.oplog = oplog
+        self.straggler_factor = straggler_factor
+        self.log_ops = log_ops
+        self.queue_high_watermark = queue_high_watermark
+        self.queue_buildup_s = queue_buildup_s
+        self.queue_irq_cooldown_s = queue_irq_cooldown_s
+        self._ewma: Dict[tuple, float] = {}
+        self._entries: Dict[str, _TenantEntry] = {}
+        self._lock = threading.Lock()
+        self._seq = 0
+
+    # -- tenant lifecycle ----------------------------------------------
+    def register(self, tenant, weight: float = 1.0,
+                 priority: int = PRIORITY_NORMAL,
+                 rate_limit_ops: float = 0.0):
+        with self._lock:
+            e = _TenantEntry(tenant=tenant,
+                             stats=TenantSchedStats(weight=weight,
+                                                    priority=priority),
+                             weight=max(weight, 1e-6), priority=priority,
+                             rate_limit=rate_limit_ops,
+                             tokens=max(1.0, rate_limit_ops),
+                             t_tokens=time.monotonic())
+            self._entries[tenant.name] = e
+        return e
+
+    def unregister(self, name: str):
+        with self._lock:
+            e = self._entries.pop(name, None)
+        if e is not None:
+            self._drain(e, RuntimeError(f"tenant {name} destroyed"))
+
+    def _drain(self, entry: _TenantEntry, exc: Exception):
+        while entry.q:
+            job = entry.q.popleft()
+            job.future.set_exception(exc)
+
+    # -- submission API ------------------------------------------------
+    def submit(self, tenant, op: str, work: Callable,
+               detail: Optional[dict] = None) -> Future:
+        raise NotImplementedError
+
+    def execute(self, tenant, op: str, work: Callable,
+                detail: Optional[dict] = None):
+        return self.submit(tenant, op, work, detail).result()
+
+    # -- shared service path -------------------------------------------
+    def _make_job(self, tenant, op, work, detail) -> _Job:
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+            e = self._entries.get(tenant.name)
+            if e is not None:
+                e.stats.submitted += 1
+        return _Job(tenant, op, work, detail or {}, Future(),
+                    time.monotonic(), seq)
+
+    def _run_job(self, job: _Job):
+        t = job.tenant
+        e = self._entries.get(t.name)
+        rec = self.oplog.begin(t.name, job.op, job.detail) \
+            if (self.oplog is not None and self.log_ops) else None
+        t.enter_op()
+        t0 = time.perf_counter()
+        ok, val = True, None
+        try:
+            val = job.work()
+        except Exception as exc:          # noqa: BLE001 — forwarded
+            ok, val = False, exc
+        finally:
+            t.exit_op()
+            dt = time.perf_counter() - t0
+            self._observe(t, job.op, dt)
+            if rec is not None:
+                self.oplog.end(rec)
+            if e is not None:
+                with self._lock:
+                    e.stats.wait_s += max(0.0, time.monotonic()
+                                          - job.t_submit - dt)
+                    e.stats.service_s += dt
+                    if ok:
+                        e.stats.completed += 1
+                    else:
+                        e.stats.failed += 1
+        if ok:
+            job.future.set_result(val)
+        else:
+            job.future.set_exception(val)
+        return dt
+
+    # -- straggler detection (EWMA deadline per (tenant, op)) ----------
+    def _observe(self, t, op: str, dt: float):
+        key = (t.name, op)
+        ew = self._ewma.get(key)
+        if ew is not None and dt > self.straggler_factor * ew:
+            t.straggler_count += 1
+            e = self._entries.get(t.name)
+            if e is not None:
+                e.stats.stragglers += 1
+            t.cq.raise_event(IRQ_DEGRADED, "straggler",
+                             {"op": op, "dt": dt, "ewma": ew})
+        self._ewma[key] = dt if ew is None else 0.8 * ew + 0.2 * dt
+
+    # -- queue-buildup IRQ ---------------------------------------------
+    def _note_depth(self, e: _TenantEntry):
+        """Call with self._lock held, after a depth change."""
+        depth = len(e.q)
+        e.stats.queue_depth = depth
+        now = time.monotonic()
+        if depth < self.queue_high_watermark:
+            e.buildup_since = None
+            return None
+        if e.buildup_since is None:
+            e.buildup_since = now
+            return None
+        if (now - e.buildup_since >= self.queue_buildup_s
+                and now - e.last_buildup_irq >= self.queue_irq_cooldown_s):
+            e.last_buildup_irq = now
+            return {"depth": depth, "since_s": now - e.buildup_since}
+        return None
+
+    # -- introspection -------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return {"policy": self.name,
+                    "tenants": {n: e.stats.snapshot()
+                                for n, e in self._entries.items()}}
+
+    def shutdown(self):
+        pass
+
+
+class PassthroughPlane(DataPlane):
+    """bev/hybrid: ops run on the caller's thread, no cross-tenant queue."""
+
+    name = "passthrough"
+
+    def submit(self, tenant, op, work, detail=None) -> Future:
+        job = self._make_job(tenant, op, work, detail)
+        self._run_job(job)
+        return job.future
+
+    def execute(self, tenant, op, work, detail=None):
+        # Same as submit().result(), but raises the original traceback.
+        fut = self.submit(tenant, op, work, detail)
+        exc = fut.exception()
+        if exc is not None:
+            raise exc
+        return fut.result()
+
+
+class _QueuedPlane(DataPlane):
+    """Common machinery for planes with a worker thread + tenant queues."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self._cv = threading.Condition(self._lock)
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    def submit(self, tenant, op, work, detail=None) -> Future:
+        job = self._make_job(tenant, op, work, detail)
+        buildup = None
+        with self._cv:
+            e = self._entries.get(tenant.name)
+            if e is None:
+                job.future.set_exception(
+                    KeyError(f"tenant {tenant.name} not registered"))
+                return job.future
+            e.q.append(job)
+            buildup = self._note_depth(e)
+            self._cv.notify()
+        if buildup is not None:
+            tenant.cq.raise_event(IRQ_DEGRADED, "queue_buildup", buildup)
+        return job.future
+
+    # -- worker --------------------------------------------------------
+    def _loop(self):
+        while not self._stop.is_set():
+            with self._cv:
+                job, entry, delay = self._pick()
+                if job is None:
+                    self._cv.wait(timeout=delay if delay else 0.05)
+                    continue
+                entry.q.popleft()
+                self._note_depth(entry)
+            dt = self._run_job(job)
+            self._charge(entry, dt)
+
+    def _pick(self):
+        """Return (job, entry, retry_delay); job is peeked, not popped.
+        Called with the lock held."""
+        raise NotImplementedError
+
+    def _charge(self, entry: _TenantEntry, service_s: float):
+        pass
+
+    def shutdown(self):
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        self._worker.join(timeout=2)
+
+
+class BrokerPlane(_QueuedPlane):
+    """fev: single broker thread, round-robin one op per tenant per sweep."""
+
+    name = "broker"
+
+    def __init__(self, **kw):
+        self._rr: deque = deque()            # tenant-name rotation order
+        super().__init__(**kw)
+
+    def register(self, tenant, **kw):
+        e = super().register(tenant, **kw)
+        with self._cv:
+            self._rr.append(tenant.name)
+            self._cv.notify()
+        return e
+
+    def unregister(self, name):
+        with self._cv:
+            try:
+                self._rr.remove(name)
+            except ValueError:
+                pass
+        super().unregister(name)
+
+    def _pick(self):
+        for _ in range(len(self._rr)):
+            self._rr.rotate(-1)
+            e = self._entries.get(self._rr[-1])
+            if e is not None and e.q:
+                return e.q[0], e, None
+        return None, None, None
+
+
+class WFQPlane(_QueuedPlane):
+    """Weighted fair queueing with priority classes and op-rate limits.
+
+    Virtual-time WFQ: serving tenant *i* an op of measured service time
+    *c* advances its virtual time by ``c / weight_i``; the scheduler
+    always serves, within the most urgent non-empty priority class, the
+    backlogged tenant with the smallest virtual time. Equal-cost ops
+    therefore complete in proportion to configured weights whenever
+    tenants stay backlogged. A tenant returning from idle restarts at
+    the current virtual clock (no credit hoarding). Optional per-tenant
+    token buckets (``rate_limit_ops`` ops/sec, burst of one second)
+    bound offered rate independently of weight.
+    """
+
+    name = "wfq"
+
+    # Floor on per-op cost so zero-duration ops still advance vtime.
+    MIN_COST_S = 1e-6
+
+    def __init__(self, **kw):
+        self._vclock = 0.0
+        super().__init__(**kw)
+
+    def _refill(self, e: _TenantEntry, now: float):
+        if e.rate_limit <= 0.0:
+            return True, None
+        burst = max(1.0, e.rate_limit)            # ≥1 so sub-1Hz rates fire
+        e.tokens = min(burst, e.tokens + (now - e.t_tokens) * e.rate_limit)
+        e.t_tokens = now
+        if e.tokens >= 1.0:
+            return True, None
+        return False, (1.0 - e.tokens) / e.rate_limit
+
+    def _pick(self):
+        now = time.monotonic()
+        best, best_delay = None, None
+        for e in self._entries.values():
+            if not e.q:
+                continue
+            ready, delay = self._refill(e, now)
+            if not ready:
+                best_delay = delay if best_delay is None \
+                    else min(best_delay, delay)
+                continue
+            vt = max(e.vtime, self._vclock)
+            key = (e.priority, vt, e.q[0].seq)
+            if best is None or key < best[0]:
+                best = (key, e)
+        if best is None:
+            return None, None, best_delay
+        e = best[1]
+        if e.rate_limit > 0.0:
+            e.tokens -= 1.0
+        return e.q[0], e, None
+
+    def _charge(self, entry: _TenantEntry, service_s: float):
+        with self._lock:
+            cost = max(service_s, self.MIN_COST_S)
+            start = max(entry.vtime, self._vclock)
+            entry.vtime = start + cost / entry.weight
+            self._vclock = start
+            entry.stats.credit = entry.vtime
+
+
+# ---------------------------------------------------------------------------
+# Policy string → plane factory (the VMM's single point of selection)
+# ---------------------------------------------------------------------------
+
+def make_data_plane(policy: str, oplog=None, **kw) -> DataPlane:
+    """``fev``/``bev``/``hybrid``/``wfq`` → configured DataPlane."""
+    if policy == "fev":
+        return BrokerPlane(oplog=oplog, log_ops=True, **kw)
+    if policy == "bev":
+        return PassthroughPlane(oplog=oplog, log_ops=False, **kw)
+    if policy == "hybrid":
+        return PassthroughPlane(oplog=oplog, log_ops=True, **kw)
+    if policy == "wfq":
+        return WFQPlane(oplog=oplog, log_ops=True, **kw)
+    raise ValueError(f"unknown data-plane policy: {policy!r}")
+
+
+POLICIES = ("fev", "bev", "hybrid", "wfq")

@@ -112,6 +112,7 @@ class CompletionQueue:
         self.handlers: Dict[int, Callable] = {}
         self.dropped = 0
         self._lock = threading.Lock()
+        self._delivering = False                 # single-deliverer flag
 
     # -- guest/VMM API ---------------------------------------------------
     def set_irq(self, source: int, handler: Callable):
@@ -138,29 +139,59 @@ class CompletionQueue:
         self._deliver_pending()
 
     def _deliver_pending(self):
+        """Iterative, non-reentrant delivery loop.
+
+        Exactly one thread at a time acts as the deliverer; any call
+        arriving while delivery is in progress (a handler unmasking its
+        source via ``set_mask``, a handler raising a new event, or a
+        concurrent ``raise_event``) returns immediately — the active
+        loop re-scans the ring after every handler, so those events are
+        still picked up, in ring order, without recursion.
+        """
         with self._lock:
-            # deliver only unmasked sources WITH a registered handler —
-            # orphan events stay pending (status bit set) until the host
-            # installs an ISR, per the paper's status-register protocol
-            deliver = [ev for ev in self.ring
-                       if not (self.mask >> ev.source) & 1
-                       and ev.source in self.handlers]
-            for ev in deliver:
-                self.ring.remove(ev)
-            # recompute status word
-            self.status = 0
-            for ev in self.ring:
-                self.status |= (1 << ev.source)
-            handlers = dict(self.handlers)
-        for ev in deliver:
-            h = handlers.get(ev.source)
-            if h is not None:
-                # host ISR: mask the source while the handler runs (§IV.B)
-                self.set_mask(ev.source, True)
+            if self._delivering:
+                return
+            self._delivering = True
+        owner = True
+        try:
+            while True:
+                with self._lock:
+                    # deliver only unmasked sources WITH a registered
+                    # handler — orphan events stay pending (status bit
+                    # set) until the host installs an ISR, per the
+                    # paper's status-register protocol
+                    ev = next((e for e in self.ring
+                               if not (self.mask >> e.source) & 1
+                               and e.source in self.handlers), None)
+                    if ev is None:
+                        # clear the flag in the same critical section as
+                        # the emptiness check: a concurrent raise_event
+                        # either lands before (we'd have found it) or
+                        # after (it sees the flag down and delivers)
+                        self._delivering = False
+                        owner = False
+                        return
+                    self.ring.remove(ev)
+                    self.status = 0
+                    for e in self.ring:
+                        self.status |= (1 << e.source)
+                    h = self.handlers[ev.source]
+                    # host ISR: mask the source while the handler runs
+                    # (§IV.B) — inline, so the unmask below cannot
+                    # recurse back into delivery
+                    self.mask |= (1 << ev.source)
                 try:
                     h(ev)
                 finally:
-                    self.set_mask(ev.source, False)
+                    with self._lock:
+                        self.mask &= ~(1 << ev.source)
+        finally:
+            # only on the exceptional path: a handler raised before the
+            # normal handoff above. An unconditional clear here could
+            # stomp a new deliverer that took over after that handoff.
+            if owner:
+                with self._lock:
+                    self._delivering = False
 
     def pending(self) -> List[Event]:
         with self._lock:

@@ -74,6 +74,16 @@ class GuestDevice:
     def run(self, *args, **kw):
         return self._vmm.op_run(self._tenant, *args, **kw)
 
+    # -- async data plane (scheduler submit() path; returns Futures) --------
+    def run_async(self, *args, **kw):
+        return self._vmm.op_run_async(self._tenant, *args, **kw)
+
+    def write_async(self, handle: int, data: np.ndarray, sharding=None):
+        return self._vmm.op_write_async(self._tenant, handle, data, sharding)
+
+    def read_async(self, handle: int):
+        return self._vmm.op_read_async(self._tenant, handle)
+
 
 @dataclass
 class Tenant:

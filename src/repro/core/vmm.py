@@ -1,28 +1,31 @@
 """VMM — the hypervisor / resource broker (paper §III-B/C, §IV).
 
-Policies (the paper's taxonomy, selectable per-VMM):
+Policies (the paper's taxonomy, selectable per-VMM; dispatch itself
+lives in :mod:`repro.core.scheduler`):
 
-* ``fev``    — front-end virtualization: *every* operator, including step
-  execution, is enqueued to the broker thread which round-robins across
-  tenant queues. Maximal isolation+interposition; queueing overhead on the
-  data plane; reconfigurations serialize behind the broker.
+* ``fev``    — front-end virtualization: *every* data-plane operator is
+  enqueued to a broker thread which round-robins across tenant queues
+  (``BrokerPlane``). Maximal isolation+interposition; queueing overhead
+  on the data plane.
 * ``bev``    — back-end pass-through: the tenant owns its slice; ``run``
-  invokes the loaded executable directly; only load/unload is mediated.
+  invokes the loaded executable directly (``PassthroughPlane``, no op
+  log); only load/unload is mediated.
 * ``hybrid`` — the paper's design (default): control plane (open/close/
   alloc/free/reprogram/checkpoint) mediated + logged, data plane
   pass-through with op-log sampling.
+* ``wfq``    — weighted fair queueing (``WFQPlane``): FEV-style
+  mediation with per-tenant weights, priority classes, and op-rate
+  limits for multi-tenant QoS.
 
 Also implemented here: admission (floorplanner + MMU pool + completion
 queue per tenant), the freeze/quiesce protocol around reconfiguration,
-straggler detection (EWMA deadline), slice-failure handling via live
-migration, and the per-tenant HBM quota.
+slice-failure handling via live migration, and the per-tenant HBM
+quota. Straggler detection, op queueing, and scheduler statistics are
+delegated to the selected ``DataPlane``.
 """
 from __future__ import annotations
 
-import queue
 import threading
-import time
-from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -32,13 +35,12 @@ from repro.core.interposition import OpLog, TenantCheckpointer
 from repro.core.isolation import IsolationAuditor
 from repro.core.reconfig import (Bitfile, CompileService, LegalityError,
                                  ProgramLoader, ProgramRequest)
+# IRQ sources live with the scheduler; re-exported here for compatibility.
+from repro.core.scheduler import (IRQ_DEGRADED, IRQ_DONE,  # noqa: F401
+                                  IRQ_RECONFIG, POLICIES, make_data_plane)
 from repro.core.shell import CompletionQueue, TransferEngine
 from repro.core.tenant import GuestBuffer, GuestDevice, Tenant
 from repro.core.vslice import Floorplanner
-
-IRQ_DONE = 0           # completion-queue sources
-IRQ_RECONFIG = 1
-IRQ_DEGRADED = 2
 
 
 class AdmissionError(Exception):
@@ -53,8 +55,9 @@ class VMM:
                  segment_bytes: int = mmu_mod.SEGMENT_BYTES,
                  ckpt_root: str = "/tmp/vpod_ckpt",
                  straggler_factor: float = 4.0,
-                 oplog_sampling: float = 1.0):
-        assert policy in ("fev", "bev", "hybrid")
+                 oplog_sampling: float = 1.0,
+                 scheduler_opts: Optional[dict] = None):
+        assert policy in POLICIES
         self.policy = policy
         self.mmu_backend = mmu_backend
         self.hbm_per_chip = hbm_per_chip
@@ -68,23 +71,30 @@ class VMM:
         self.loader = ProgramLoader(auditor=self.auditor)
         self.checkpointer = TenantCheckpointer(ckpt_root)
         self.tenants: Dict[str, Tenant] = {}
-        self.straggler_factor = straggler_factor
-        self._ewma: Dict[Tuple[str, str], float] = {}
         self._lock = threading.Lock()
-        # FEV broker
-        self._queues: Dict[str, queue.Queue] = {}
-        self._broker_stop = threading.Event()
-        self._broker = None
-        if policy == "fev":
-            self._broker = threading.Thread(target=self._broker_loop,
-                                            daemon=True)
-            self._broker.start()
+        # Data-plane dispatch is fully delegated to the scheduler subsystem.
+        self.plane = make_data_plane(policy, oplog=self.oplog,
+                                     straggler_factor=straggler_factor,
+                                     **(scheduler_opts or {}))
+
+    # Straggler EWMA state lives in the plane; keep the historical
+    # ``vmm.straggler_factor`` knob working (tests tune it post-init).
+    @property
+    def straggler_factor(self) -> float:
+        return self.plane.straggler_factor
+
+    @straggler_factor.setter
+    def straggler_factor(self, v: float):
+        self.plane.straggler_factor = v
 
     # ==================================================================
     # Admission / teardown
     # ==================================================================
     def create_vm(self, name: str, slice_shape: Tuple[int, int],
-                  hbm_quota_bytes: Optional[int] = None) -> Tenant:
+                  hbm_quota_bytes: Optional[int] = None,
+                  sched_weight: float = 1.0,
+                  sched_priority: Optional[int] = None,
+                  sched_rate_limit_ops: float = 0.0) -> Tenant:
         rec = self.oplog.begin(name, "admit", {"shape": slice_shape})
         vs = self.floorplanner.allocate(slice_shape)
         if vs is None:
@@ -101,9 +111,13 @@ class VMM:
         t.device = GuestDevice(self, t)
         if hbm_quota_bytes is not None:
             pool.set_quota(name, hbm_quota_bytes)
+        sched_kw = {"weight": sched_weight,
+                    "rate_limit_ops": sched_rate_limit_ops}
+        if sched_priority is not None:
+            sched_kw["priority"] = sched_priority
         with self._lock:
             self.tenants[name] = t
-            self._queues[name] = queue.Queue()
+        self.plane.register(t, **sched_kw)
         self.oplog.end(rec)
         return t
 
@@ -111,7 +125,7 @@ class VMM:
         rec = self.oplog.begin(name, "evict", {})
         with self._lock:
             t = self.tenants.pop(name)
-            self._queues.pop(name, None)
+        self.plane.unregister(name)
         self.loader.unload(t.vslice)
         self.floorplanner.free(t.vslice.slice_id)
         self.oplog.end(rec)
@@ -196,10 +210,10 @@ class VMM:
             self.oplog.end(rec)
 
     # ==================================================================
-    # Data plane (policy-dependent)
+    # Data plane (delegated to the scheduler subsystem — see scheduler.py)
     # ==================================================================
-    def op_write(self, t: Tenant, handle: int, data: np.ndarray,
-                 sharding=None):
+    def _write_work(self, t: Tenant, handle: int, data: np.ndarray,
+                    sharding):
         def work():
             t.pool.translate(handle, owner=t.name)   # ownership + bounds
             buf = t.buffers[handle]
@@ -212,92 +226,57 @@ class VMM:
             buf.device_array = self.transfer.h2d(
                 data, device=dev, sharding=sharding)
             return handle
+        return work
 
-        return self._data_op(t, "write", work,
-                             {"handle": handle, "nbytes": data.nbytes})
-
-    def op_read(self, t: Tenant, handle: int) -> np.ndarray:
+    def _read_work(self, t: Tenant, handle: int):
         def work():
             t.pool.translate(handle, owner=t.name)
             buf = t.buffers[handle]
             if buf.device_array is None:
                 raise mmu_mod.MMUError("buffer not written")
             return self.transfer.d2h(buf.device_array)
+        return work
 
-        return self._data_op(t, "read", work, {"handle": handle})
-
-    def op_run(self, t: Tenant, *args, **kw):
-        if t.program is None:
-            raise LegalityError("no program loaded — reprogram first")
-
+    def _run_work(self, t: Tenant, args, kw):
         def work():
             out = t.program(*args, **kw)
             t.cq.raise_event(IRQ_DONE, "run_done", {"step": t.step})
             t.step += 1
             return out
+        return work
 
-        return self._data_op(t, "run", work, {"step": t.step})
+    def op_write(self, t: Tenant, handle: int, data: np.ndarray,
+                 sharding=None):
+        return self.plane.execute(t, "write",
+                                  self._write_work(t, handle, data, sharding),
+                                  {"handle": handle, "nbytes": data.nbytes})
 
-    # ------------------------------------------------------------------
-    def _data_op(self, t: Tenant, op: str, work, detail):
-        if self.policy == "fev":
-            fut: queue.Queue = queue.Queue(maxsize=1)
-            self._queues[t.name].put((op, work, detail, fut))
-            ok, val = fut.get()
-            if not ok:
-                raise val
-            return val
-        # bev / hybrid: pass-through (hybrid still samples the op log)
-        rec = self.oplog.begin(t.name, op, detail) \
-            if self.policy == "hybrid" else None
-        t.enter_op()
-        t0 = time.perf_counter()
-        try:
-            return work()
-        finally:
-            t.exit_op()
-            self._observe(t, op, time.perf_counter() - t0)
-            if rec is not None:
-                self.oplog.end(rec)
+    def op_write_async(self, t: Tenant, handle: int, data: np.ndarray,
+                       sharding=None):
+        return self.plane.submit(t, "write",
+                                 self._write_work(t, handle, data, sharding),
+                                 {"handle": handle, "nbytes": data.nbytes})
 
-    def _broker_loop(self):
-        """FEV broker: round-robin one op per tenant queue per sweep."""
-        while not self._broker_stop.is_set():
-            busy = False
-            with self._lock:
-                qs = list(self._queues.items())
-            for name, q in qs:
-                try:
-                    op, work, detail, fut = q.get_nowait()
-                except queue.Empty:
-                    continue
-                busy = True
-                t = self.tenants.get(name)
-                rec = self.oplog.begin(name, op, detail)
-                t.enter_op()
-                t0 = time.perf_counter()
-                try:
-                    fut.put((True, work()))
-                except Exception as e:     # noqa: BLE001 — forwarded
-                    fut.put((False, e))
-                finally:
-                    t.exit_op()
-                    self._observe(t, op, time.perf_counter() - t0)
-                    self.oplog.end(rec)
-            if not busy:
-                time.sleep(0.0005)
+    def op_read(self, t: Tenant, handle: int) -> np.ndarray:
+        return self.plane.execute(t, "read", self._read_work(t, handle),
+                                  {"handle": handle})
 
-    # ------------------------------------------------------------------
-    # Straggler detection: EWMA deadline per (tenant, op)
-    # ------------------------------------------------------------------
-    def _observe(self, t: Tenant, op: str, dt: float):
-        key = (t.name, op)
-        ew = self._ewma.get(key)
-        if ew is not None and dt > self.straggler_factor * ew:
-            t.straggler_count += 1
-            t.cq.raise_event(IRQ_DEGRADED, "straggler",
-                             {"op": op, "dt": dt, "ewma": ew})
-        self._ewma[key] = dt if ew is None else 0.8 * ew + 0.2 * dt
+    def op_read_async(self, t: Tenant, handle: int):
+        return self.plane.submit(t, "read", self._read_work(t, handle),
+                                 {"handle": handle})
+
+    def op_run(self, t: Tenant, *args, **kw):
+        if t.program is None:
+            raise LegalityError("no program loaded — reprogram first")
+        return self.plane.execute(t, "run", self._run_work(t, args, kw),
+                                  {"step": t.step})
+
+    def op_run_async(self, t: Tenant, *args, **kw):
+        """Async data-plane submission: returns a Future for the run."""
+        if t.program is None:
+            raise LegalityError("no program loaded — reprogram first")
+        return self.plane.submit(t, "run", self._run_work(t, args, kw),
+                                 {"step": t.step})
 
     # ==================================================================
     # Fault tolerance: checkpoint / restore / migrate (interposition)
@@ -371,9 +350,7 @@ class VMM:
 
     # ==================================================================
     def shutdown(self):
-        self._broker_stop.set()
-        if self._broker is not None:
-            self._broker.join(timeout=2)
+        self.plane.shutdown()
 
     def stats(self) -> dict:
         return {
@@ -386,4 +363,5 @@ class VMM:
             "violations": self.auditor.summary(),
             "transfer": self.transfer.stats.__dict__,
             "oplog_records": len(self.oplog.records),
+            "scheduler": self.plane.stats(),
         }

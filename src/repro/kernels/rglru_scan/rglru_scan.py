@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 BS, BD = 256, 512
 
 
@@ -54,7 +56,7 @@ def rglru_scan(a, b, h0, *, interpret=False, bs=BS, bd=BD):
         out_specs=pl.BlockSpec((1, bs, bd), lambda i, j, s: (i, s, j)),
         out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, h0)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 CHUNK = 32
 
 
@@ -91,7 +93,7 @@ def rwkv6_wkv(r, k, v, logw, u, s0, *, interpret=False, chunk=CHUNK):
         out_shape=(jax.ShapeDtypeStruct((B, H, S, K), jnp.float32),
                    jax.ShapeDtypeStruct((B, H, K, K), jnp.float32)),
         scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, logw, u, s0)

@@ -1,8 +1,13 @@
-"""Serving driver: batched prefill+decode through the ServeEngine.
+"""Serving driver: continuous-batching prefill+decode via ServeEngine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 8 --max-new 16
     ... --virtualized   # route steps through the VMM data plane
+    ... --virtualized --policy wfq   # weighted-fair-queued data plane
+
+Requests are submitted with varying prompt lengths and token budgets;
+the engine admits them into batch slots as earlier requests hit EOS, so
+slot recycling is visible in the per-request completion log.
 """
 from __future__ import annotations
 
@@ -23,7 +28,8 @@ def main():
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--virtualized", action="store_true")
-    ap.add_argument("--policy", default="hybrid")
+    ap.add_argument("--policy", default="hybrid",
+                    choices=["fev", "bev", "hybrid", "wfq"])
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -91,24 +97,27 @@ def main():
     for i in range(args.requests):
         plen = args.prompt_len + int(rng.integers(0, 8))
         prompt = rng.integers(0, cfg.vocab, size=(plen,))
-        engine.submit(prompt, max_new_tokens=args.max_new,
+        # skew token budgets so slots free at different steps and the
+        # engine's mid-decode admission actually kicks in
+        budget = max(1, args.max_new - 4 * (i % 3))
+        engine.submit(prompt, max_new_tokens=budget,
                       temperature=0.0 if i % 2 == 0 else 0.8)
 
     t0 = time.perf_counter()
     done = 0
     new_tokens = 0
-    while done < args.requests:
-        finished = engine.run_round(params)
-        if not finished:
-            break
-        for r in finished:
+    while engine.has_work():
+        for r in engine.step(params):
             done += 1
             new_tokens += len(r.out_tokens)
             print(f"[serve] req {r.rid}: prompt {len(r.prompt)} tok → "
                   f"{len(r.out_tokens)} new: {r.out_tokens[:8]}…")
     dt = time.perf_counter() - t0
+    s = engine.stats
     print(f"[serve] {done} requests, {new_tokens} tokens in {dt:.2f}s "
           f"({new_tokens / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] engine: {s.steps} steps, {s.full_prefills} prefills, "
+          f"{s.scatter_admissions} mid-decode admissions")
     if args.virtualized:
         print("[serve] vmm stats:", vmm.stats())
         vmm.shutdown()

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.models.layers import apply_rope, dense_init, dt
 
 _DIRECT_MAX = 2048      # S at or below which the dense path is used
@@ -412,7 +413,7 @@ def _attn_decode_splitk(cfg, q, k_new, v_new, cache, pos, window, mesh,
     qspec = P(b_axes, None, None, None)
     seq_sh = seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes)
     cspec = P(b_axes, seq_sh, None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         inner, mesh=mesh,
         in_specs=(qspec, qspec, qspec, cspec, cspec, P()),
         out_specs=(qspec, cspec, cspec),

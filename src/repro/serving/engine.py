@@ -1,21 +1,42 @@
-"""Batched serving engine: prefill + decode loop with a KV-cache slot pool.
+"""Continuous-batching serving engine: per-slot KV state, per-step
+admission into freed slots, EOS-triggered slot recycling mid-decode.
 
 The engine is deliberately runtime-agnostic: it takes *callables* for
 prefill/decode, so the same engine runs
 
 * natively  (direct jit'd functions), or
-* virtualized (functions routed through the VMM — the paper's FEV/hybrid
-  data plane), which is how benchmarks/fig6a measures virtualization
-  overhead for serving.
+* virtualized (functions routed through the VMM — the paper's FEV/
+  hybrid/WFQ data plane), which is how benchmarks/fig6a measures
+  virtualization overhead for serving.
 
-Request flow: submit() → waiting queue → admit into fixed batch slots →
-prefill (padded batch) → greedy/temperature decode until EOS/max — a
-static-batching engine with slot re-admission (continuous batching lite).
+Request flow: ``submit() → waiting queue → admitted into the first free
+batch slot → prefill → per-step greedy/temperature decode``. Unlike the
+old run-to-completion static batcher, a slot is recycled the moment its
+request hits EOS (or its token budget): the next ``step()`` admits a
+waiting request into the freed slot *mid-decode* without disturbing the
+other slots' KV caches.
+
+Admission mechanics (all slots share one scalar decode position, as the
+model's ``decode(params, caches, token, pos)`` API requires):
+
+* fresh batch (no live slots)      → full prefill at the newcomers'
+  padded prompt length;
+* newcomer prompt ≤ current pos    → the newcomer is prefilled left-
+  padded to the current position and its rows are *scattered* into the
+  live cache pytree (the continuous-batching fast path);
+* newcomer prompt >  current pos   → fall back to re-prefilling every
+  occupied slot's full context (prompt + generated tokens) at a new,
+  longer shared position.
+
+``submit()`` returns a request id; ``future(rid)`` exposes a
+``concurrent.futures.Future`` resolved with the finished ``Request`` —
+the engine-level mirror of the scheduler subsystem's async submit path.
 """
 from __future__ import annotations
 
 import queue
 import threading
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
@@ -32,6 +53,24 @@ class Request:
     temperature: float = 0.0            # 0 → greedy
     out_tokens: list = field(default_factory=list)
     done: bool = False
+
+    def context(self) -> np.ndarray:
+        """Prompt plus everything generated so far (for re-prefill)."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)])
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    decode_steps: int = 0
+    full_prefills: int = 0
+    scatter_admissions: int = 0
+    admitted: int = 0
+    completed: int = 0
+    generated_tokens: int = 0
 
 
 class ServeEngine:
@@ -50,74 +89,206 @@ class ServeEngine:
         self._rid = 0
         self.waiting: "queue.Queue[Request]" = queue.Queue()
         self.completed: dict = {}
+        self._futures: dict = {}
         self._lock = threading.Lock()
+        self.stats = EngineStats()
+        # per-slot decode state (continuous batching)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self._caches = None
+        self._logits: Optional[np.ndarray] = None    # (B, V*) host copy
+        self._pos = 0
+        self._cache_axes = None      # per-leaf batch axis (lazy), or False
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens, max_new_tokens=16, temperature=0.0):
         with self._lock:
             rid = self._rid
             self._rid += 1
+            self._futures[rid] = Future()
         req = Request(rid, np.asarray(prompt_tokens, np.int32),
                       max_new_tokens, temperature)
         self.waiting.put(req)
         return rid
 
-    # ------------------------------------------------------------------
-    def _admit(self) -> List[Request]:
-        batch = []
-        while len(batch) < self.B and not self.waiting.empty():
-            batch.append(self.waiting.get())
-        return batch
+    def future(self, rid: int) -> Future:
+        """Completion future for a submitted request id."""
+        with self._lock:
+            return self._futures[rid]
 
-    def _pad_prompts(self, reqs):
-        S = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((self.B, S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
-        return toks, S
+    def has_work(self) -> bool:
+        return (not self.waiting.empty()
+                or any(r is not None for r in self.slots))
 
     # ------------------------------------------------------------------
-    def run_round(self, params):
-        """Serve one admitted batch to completion. Returns finished reqs."""
-        reqs = self._admit()
-        if not reqs:
-            return []
-        toks, S = self._pad_prompts(reqs)
+    # Admission
+    # ------------------------------------------------------------------
+    def _pad_contexts(self, rows, L) -> np.ndarray:
+        toks = np.zeros((self.B, L), np.int32)
+        for i in rows:
+            ctx = self.slots[i].context()
+            toks[i, L - len(ctx):] = ctx                 # left-pad
+        return toks
+
+    def _prefill(self, params, toks: np.ndarray, L: int):
         batch = {"tokens": jnp.asarray(toks), **self.extra_batch}
         logits, caches = self.prefill_fn(params, batch)
-        logits = np.asarray(jax.device_get(logits), np.float32)
+        return np.asarray(jax.device_get(logits), np.float32), caches
 
-        max_new = max(r.max_new_tokens for r in reqs)
-        pos = S
-        active = np.ones(self.B, bool)
-        active[len(reqs):] = False
-        for step in range(max_new):
-            nxt = self._sample(logits, reqs)
-            for i, r in enumerate(reqs):
-                if active[i] and len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(nxt[i]))
-                    if nxt[i] == self.eos_id or \
-                            len(r.out_tokens) >= r.max_new_tokens:
-                        active[i] = False
-            if not active.any():
+    def _admit(self, params):
+        newcomers = []
+        for i in range(self.B):
+            if self.slots[i] is not None:
+                continue
+            if self.waiting.empty():
                 break
-            token = jnp.asarray(nxt.reshape(self.B, 1).astype(np.int32))
-            logits, caches = self.decode_fn(params, caches, token,
-                                            jnp.int32(pos))
-            logits = np.asarray(jax.device_get(logits), np.float32)
-            pos += 1
+            self.slots[i] = self.waiting.get()
+            newcomers.append(i)
+        if not newcomers:
+            return
+        self.stats.admitted += len(newcomers)
+        live = [i for i in range(self.B)
+                if self.slots[i] is not None and i not in newcomers]
+        if not live or self._caches is None:
+            # fresh batch: everyone prefills together
+            occupied = [i for i in range(self.B) if self.slots[i] is not None]
+            L = max(len(self.slots[i].context()) for i in occupied)
+            self._full_prefill(params, occupied, L)
+        elif all(len(self.slots[i].prompt) <= self._pos for i in newcomers):
+            self._scatter_prefill(params, newcomers)
+        else:
+            occupied = live + newcomers
+            L = max(self._pos,
+                    max(len(self.slots[i].context()) for i in occupied))
+            self._full_prefill(params, occupied, L)
 
-        for r in reqs:
-            r.done = True
-            self.completed[r.rid] = r
-        return reqs
+    def _full_prefill(self, params, rows, L):
+        self.stats.full_prefills += 1
+        toks = self._pad_contexts(rows, L)
+        self._logits, self._caches = self._prefill(params, toks, L)
+        self._pos = L
 
-    def _sample(self, logits, reqs):
+    def _batch_axes(self, params):
+        """Per-cache-leaf batch axis, found by abstractly evaluating
+        prefill at two batch sizes and diffing leaf shapes (a scanned
+        layer stack puts batch at axis 1, so position can't be assumed;
+        with n_layers == B no shape heuristic can disambiguate).
+        ``False`` if detection failed — scatter then falls back to a
+        full re-prefill."""
+        if self._cache_axes is not None:
+            return self._cache_axes
+        try:
+            def abstract_caches(b):
+                batch = {"tokens": jax.ShapeDtypeStruct((b, 8), jnp.int32)}
+                for k, v in self.extra_batch.items():
+                    batch[k] = jax.ShapeDtypeStruct(
+                        (b,) + tuple(np.shape(v))[1:], v.dtype)
+                return jax.eval_shape(self.prefill_fn, params, batch)[1]
+
+            a, b = abstract_caches(self.B), abstract_caches(self.B + 1)
+            self._cache_axes = jax.tree.map(
+                lambda x, y: next(i for i, (m, n)
+                                  in enumerate(zip(x.shape, y.shape))
+                                  if m != n), a, b)
+        except Exception:              # noqa: BLE001 — opaque prefill_fn
+            self._cache_axes = False
+        return self._cache_axes
+
+    def _scatter_prefill(self, params, rows):
+        """Prefill newcomers at the current shared position and scatter
+        their rows into the live cache pytree — no disturbance to the
+        other slots."""
+        axes = self._batch_axes(params)
+        if axes is False:
+            occupied = [i for i in range(self.B)
+                        if self.slots[i] is not None]
+            self._full_prefill(params, occupied, self._pos)
+            return
+        self.stats.scatter_admissions += 1
+        L = self._pos
+        toks = self._pad_contexts(rows, L)
+        logits_new, caches_new = self._prefill(params, toks, L)
+        idx = jnp.asarray(np.asarray(rows, np.int32))
+
+        def merge(old, new, ax):
+            sl = [slice(None)] * old.ndim
+            sl[ax] = idx
+            sl = tuple(sl)
+            return old.at[sl].set(new[sl])
+        self._caches = jax.tree.map(merge, self._caches, caches_new, axes)
+        self._logits[rows] = logits_new[rows]
+
+    # ------------------------------------------------------------------
+    # Stepping
+    # ------------------------------------------------------------------
+    def _finish(self, i, finished):
+        r = self.slots[i]
+        r.done = True
+        self.slots[i] = None                      # recycle the slot
+        self.completed[r.rid] = r
+        self.stats.completed += 1
+        finished.append(r)
+        fut = self._futures.get(r.rid)
+        if fut is not None and not fut.done():
+            fut.set_result(r)
+
+    def step(self, params) -> List[Request]:
+        """One engine step: admit waiting requests into free slots, emit
+        one token per active slot, recycle EOS/budget-exhausted slots,
+        advance decode. Returns the requests that finished this step."""
+        finished: List[Request] = []
+        self._admit(params)
+        active = [i for i in range(self.B) if self.slots[i] is not None]
+        if not active:
+            return finished
+        self.stats.steps += 1
+        nxt = self._sample(self._logits, active)
+        token = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            r = self.slots[i]
+            if len(r.out_tokens) >= r.max_new_tokens:   # zero-budget case
+                self._finish(i, finished)
+                continue
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            self.stats.generated_tokens += 1
+            token[i, 0] = tok
+            if tok == self.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                self._finish(i, finished)
+        remaining = [i for i in range(self.B) if self.slots[i] is not None]
+        if not remaining:
+            # whole batch drained; any waiting requests get a fresh
+            # prefill on the next step — don't decode a dead batch
+            self._caches, self._logits, self._pos = None, None, 0
+            return finished
+        if self._pos >= self.capacity:
+            # KV capacity exhausted: truncate whatever is still live
+            for i in remaining:
+                self._finish(i, finished)
+            self._caches, self._logits, self._pos = None, None, 0
+            return finished
+        self.stats.decode_steps += 1
+        logits, self._caches = self.decode_fn(
+            params, self._caches, jnp.asarray(token), jnp.int32(self._pos))
+        self._logits = np.asarray(jax.device_get(logits), np.float32)
+        self._pos += 1
+        return finished
+
+    def run_round(self, params) -> List[Request]:
+        """Drain: step until nothing is waiting or in-flight. Kept for
+        the old static-batching call sites; admission now also happens
+        *between* steps, so late ``submit()``s join mid-round."""
+        finished: List[Request] = []
+        while self.has_work():
+            finished.extend(self.step(params))
+        return finished
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits, rows):
         V = self.cfg.vocab
         lg = logits[:, :V]
         out = np.zeros(logits.shape[0], np.int64)
-        for i in range(logits.shape[0]):
-            t = reqs[i].temperature if i < len(reqs) else 0.0
+        for i in rows:
+            t = self.slots[i].temperature
             if t <= 0.0:
                 out[i] = int(np.argmax(lg[i]))
             else:

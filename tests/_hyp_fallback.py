@@ -1,0 +1,77 @@
+"""Minimal stand-in for ``hypothesis`` so the property tests still run
+(as bounded seeded-random sweeps) when hypothesis isn't installed.
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``sampled_from``, ``tuples``, ``lists``. Examples are drawn from a
+fixed-seed PRNG, so runs are deterministic; there is no shrinking. The
+real library is preferred whenever importable (see requirements-dev.txt)
+— test modules fall back via:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+
+_FALLBACK_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value=0, max_value=1 << 16):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    xs = list(elements)
+    return _Strategy(lambda r: r.choice(xs))
+
+
+def _tuples(*ss):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in ss))
+
+
+def _lists(s, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    return _Strategy(
+        lambda r: [s.draw(r) for _ in range(r.randint(min_size, hi))])
+
+
+strategies = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                             tuples=_tuples, lists=_lists)
+
+
+def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(**kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            rng = random.Random(0xC0FFEE)
+            n = getattr(wrapper, "_max_examples", _FALLBACK_MAX_EXAMPLES)
+            for _ in range(n):
+                ex = {name: s.draw(rng) for name, s in kwargs.items()}
+                fn(*a, **kw, **ex)
+        # hide the strategy-supplied params from pytest's fixture
+        # resolution (hypothesis does the same)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in kwargs])
+        return wrapper
+    return deco

@@ -11,6 +11,12 @@ if SRC not in sys.path:
     sys.path.insert(0, os.path.abspath(SRC))
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running integration test (deselect with -m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     import jax

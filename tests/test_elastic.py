@@ -18,7 +18,6 @@ def fake_vmm(tmp_path, rows=4, cols=4):
 
     vmm = VMM.__new__(VMM)
     import threading
-    import queue
     from repro.core.interposition import OpLog, TenantCheckpointer
     from repro.core.isolation import IsolationAuditor
     from repro.core.reconfig import CompileService, ProgramLoader
@@ -46,12 +45,10 @@ def fake_vmm(tmp_path, rows=4, cols=4):
     vmm.loader = ProgramLoader()
     vmm.checkpointer = TenantCheckpointer(str(tmp_path / "ck"))
     vmm.tenants = {}
-    vmm.straggler_factor = 4.0
-    vmm._ewma = {}
     vmm._lock = threading.Lock()
-    vmm._queues = {}
-    vmm._broker_stop = threading.Event()
-    vmm._broker = None
+    from repro.core.scheduler import make_data_plane
+    vmm.plane = make_data_plane("hybrid", oplog=vmm.oplog,
+                                straggler_factor=4.0)
     return vmm
 
 

@@ -3,7 +3,10 @@ improvement, the buddy allocator — unit + hypothesis property tests over
 the no-overlap / conservation / isolation invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to seeded-random sweeps
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.isolation import IsolationAuditor
 from repro.core.mmu import (BACKENDS, BitmapAllocator, FreelistAllocator,

@@ -1,0 +1,333 @@
+"""Data-plane scheduler subsystem: the shared behavioral matrix all
+three policies must pass, plus WFQ-specific properties (weight
+proportionality, priority preemption, rate limiting), async future
+error propagation, and queue-buildup IRQs."""
+import threading
+import time
+
+import pytest
+
+from repro.core.interposition import OpLog
+from repro.core.scheduler import (IRQ_DEGRADED, PRIORITY_HIGH, PRIORITY_LOW,
+                                  BrokerPlane, PassthroughPlane, WFQPlane,
+                                  make_data_plane)
+from repro.core.shell import CompletionQueue
+from repro.core.tenant import Tenant
+
+PLANES = ["fev", "bev", "hybrid", "wfq"]
+QUEUED = ["fev", "wfq"]
+
+
+def mk_tenant(name="a"):
+    t = Tenant(name=name, vslice=None, pool=None, cq=CompletionQueue())
+    return t
+
+
+def mk_plane(policy, **kw):
+    kw.setdefault("oplog", OpLog())
+    return make_data_plane(policy, **kw)
+
+
+# ===========================================================================
+# Shared behavioral matrix — every policy must satisfy these
+# ===========================================================================
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_execute_returns_value(policy):
+    p = mk_plane(policy)
+    t = mk_tenant()
+    p.register(t)
+    try:
+        assert p.execute(t, "run", lambda: 41 + 1, {}) == 42
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_execute_propagates_exception(policy):
+    p = mk_plane(policy)
+    t = mk_tenant()
+    p.register(t)
+    try:
+        with pytest.raises(ValueError, match="boom"):
+            p.execute(t, "run", lambda: (_ for _ in ()).throw(
+                ValueError("boom")), {})
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_async_future_result_and_error(policy):
+    """submit() returns a Future; values and errors propagate through it
+    without raising in the submitter's thread."""
+    p = mk_plane(policy)
+    t = mk_tenant()
+    p.register(t)
+    try:
+        ok = p.submit(t, "run", lambda: "v", {})
+        assert ok.result(timeout=5) == "v"
+        bad = p.submit(t, "run", lambda: 1 / 0, {})
+        assert isinstance(bad.exception(timeout=5), ZeroDivisionError)
+        with pytest.raises(ZeroDivisionError):
+            bad.result(timeout=5)
+        # the plane survives a failed op and keeps serving
+        assert p.submit(t, "run", lambda: 7, {}).result(timeout=5) == 7
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_ordering_within_tenant_is_fifo(policy):
+    p = mk_plane(policy)
+    t = mk_tenant()
+    p.register(t)
+    try:
+        got = []
+        futs = [p.submit(t, "run", (lambda i=i: got.append(i)), {})
+                for i in range(16)]
+        for f in futs:
+            f.result(timeout=5)
+        assert got == list(range(16))
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_stats_shape_and_counters(policy):
+    p = mk_plane(policy)
+    t = mk_tenant()
+    p.register(t, weight=2.0)
+    try:
+        for _ in range(3):
+            p.execute(t, "run", lambda: None, {})
+        s = p.stats()
+        assert s["policy"] in ("passthrough", "broker", "wfq")
+        st = s["tenants"]["a"]
+        assert st["submitted"] == 3 and st["completed"] == 3
+        assert st["failed"] == 0 and st["queue_depth"] == 0
+        assert st["service_s"] >= 0.0 and st["wait_s"] >= 0.0
+        assert st["weight"] == 2.0
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_straggler_ewma_detection(policy):
+    p = mk_plane(policy, straggler_factor=3.0)
+    t = mk_tenant()
+    p.register(t)
+    events = []
+    t.cq.set_irq(IRQ_DEGRADED, lambda ev: events.append(ev.kind))
+    try:
+        for i in range(5):
+            dt = 0.08 if i == 4 else 0.005
+            p.execute(t, "run", lambda d=dt: time.sleep(d), {})
+        assert t.straggler_count >= 1
+        assert "straggler" in events
+        assert p.stats()["tenants"]["a"]["stragglers"] >= 1
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_oplog_records_match_policy(policy):
+    log = OpLog()
+    p = mk_plane(policy, oplog=log)
+    t = mk_tenant()
+    p.register(t)
+    try:
+        for _ in range(4):
+            p.execute(t, "run", lambda: None, {})
+        n = len(log.query(op="run"))
+        if policy == "bev":
+            assert n == 0          # pure pass-through: nothing recorded
+        else:
+            assert n == 4
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("policy", PLANES)
+def test_quiesce_blocks_plane(policy):
+    """The tenant freeze protocol must hold across every plane."""
+    p = mk_plane(policy)
+    t = mk_tenant()
+    p.register(t)
+    order = []
+    try:
+        with t.quiesce():
+            # a passthrough plane runs the op on the submitter's thread,
+            # so the submit must come from a thread that does NOT hold
+            # the freeze — exactly a guest issuing ops during reconfig
+            th = threading.Thread(
+                target=lambda: p.execute(t, "run",
+                                         lambda: order.append("ran"), {}))
+            th.start()
+            time.sleep(0.05)
+            assert order == []
+            order.append("frozen")
+        th.join(timeout=5)
+        assert order == ["frozen", "ran"]
+    finally:
+        p.shutdown()
+
+
+def test_unregistered_tenant_rejected():
+    for policy in QUEUED:
+        p = mk_plane(policy)
+        t = mk_tenant("ghost")
+        try:
+            fut = p.submit(t, "run", lambda: 1, {})
+            assert isinstance(fut.exception(timeout=5), KeyError)
+        finally:
+            p.shutdown()
+
+
+def test_unregister_drains_queue_with_error():
+    p = mk_plane("wfq")
+    blocker = mk_tenant("blocker")
+    victim = mk_tenant("victim")
+    p.register(blocker)
+    p.register(victim)
+    try:
+        gate = threading.Event()
+        p.submit(blocker, "run", gate.wait, {})
+        time.sleep(0.02)                   # let the worker pick it up
+        fut = p.submit(victim, "run", lambda: 1, {})
+        p.unregister("victim")
+        gate.set()
+        assert isinstance(fut.exception(timeout=5), RuntimeError)
+    finally:
+        gate.set()
+        p.shutdown()
+
+
+# ===========================================================================
+# WFQ-specific properties
+# ===========================================================================
+
+def _flood(p, tenants, n_ops, op_s=0.002):
+    """Backlog every tenant with n_ops sleep-ops; returns the futures."""
+    futs = {t.name: [] for t in tenants}
+    for _ in range(n_ops):
+        for t in tenants:
+            futs[t.name].append(
+                p.submit(t, "run", lambda: time.sleep(op_s), {}))
+    return futs
+
+
+def test_wfq_weight_proportionality():
+    """With equal-cost backlogged ops, completion counts at any point in
+    the service order track configured weights (3:1 within tolerance)."""
+    p = mk_plane("wfq")
+    a, b = mk_tenant("heavy"), mk_tenant("light")
+    p.register(a, weight=3.0)
+    p.register(b, weight=1.0)
+    try:
+        hold = threading.Event()
+        blk = mk_tenant("hold")
+        p.register(blk)
+        p.submit(blk, "run", hold.wait, {})    # park the worker …
+        futs = _flood(p, [a, b], n_ops=40)     # … while both backlogs build
+        hold.set()
+        # wait until the light tenant has completed 8 ops, then compare
+        for f in futs["light"][:8]:
+            f.result(timeout=30)
+        done_heavy = sum(f.done() for f in futs["heavy"])
+        # ideal 24 heavy per 8 light; allow generous slack for timing
+        assert done_heavy >= 16, f"heavy={done_heavy} at light=8"
+        s = p.stats()["tenants"]
+        assert s["heavy"]["credit"] > 0.0
+    finally:
+        hold.set()
+        p.shutdown()
+
+
+def test_wfq_priority_preemption_ordering():
+    """All queued high-priority ops are served before lower classes,
+    regardless of submission order."""
+    p = mk_plane("wfq")
+    hi, lo = mk_tenant("hi"), mk_tenant("lo")
+    p.register(hi, priority=PRIORITY_HIGH)
+    p.register(lo, priority=PRIORITY_LOW)
+    served = []
+    try:
+        gate = threading.Event()
+        blk = mk_tenant("gate")
+        p.register(blk)
+        p.submit(blk, "run", gate.wait, {})
+        # low-priority submitted FIRST, then high
+        fl = [p.submit(lo, "run", lambda: served.append("lo"), {})
+              for _ in range(5)]
+        fh = [p.submit(hi, "run", lambda: served.append("hi"), {})
+              for _ in range(5)]
+        gate.set()
+        for f in fl + fh:
+            f.result(timeout=10)
+        assert served == ["hi"] * 5 + ["lo"] * 5
+    finally:
+        gate.set()
+        p.shutdown()
+
+
+def test_wfq_rate_limit_caps_throughput():
+    p = mk_plane("wfq")
+    t = mk_tenant("capped")
+    p.register(t, rate_limit_ops=20.0)        # ≤ ~20 ops/sec + 1s burst
+    try:
+        futs = [p.submit(t, "run", lambda: None, {}) for _ in range(60)]
+        t0 = time.monotonic()
+        for f in futs:
+            f.result(timeout=30)
+        dt = time.monotonic() - t0
+        # 60 ops at 20/s with a 20-op burst needs ≥ ~1.5s
+        assert dt > 1.0, f"rate limit not enforced: {dt:.2f}s"
+    finally:
+        p.shutdown()
+
+
+# ===========================================================================
+# Queue buildup → IRQ_DEGRADED
+# ===========================================================================
+
+@pytest.mark.parametrize("policy", QUEUED)
+def test_sustained_queue_buildup_raises_degraded_irq(policy):
+    p = mk_plane(policy, queue_high_watermark=8, queue_buildup_s=0.05)
+    t = mk_tenant()
+    p.register(t)
+    events = []
+    t.cq.set_irq(IRQ_DEGRADED, lambda ev: events.append(ev))
+    try:
+        gate = threading.Event()
+        p.submit(t, "run", gate.wait, {})
+        futs = [p.submit(t, "run", lambda: None, {}) for _ in range(12)]
+        time.sleep(0.1)                      # hold the backlog above HWM
+        futs += [p.submit(t, "run", lambda: None, {}) for _ in range(4)]
+        gate.set()
+        for f in futs:
+            f.result(timeout=10)
+        kinds = [ev.kind for ev in events]
+        assert "queue_buildup" in kinds
+        payload = next(ev.payload for ev in events
+                       if ev.kind == "queue_buildup")
+        assert payload["depth"] >= 8
+    finally:
+        gate.set()
+        p.shutdown()
+
+
+# ===========================================================================
+# Factory
+# ===========================================================================
+
+def test_factory_policy_mapping():
+    for pol, cls in (("fev", BrokerPlane), ("bev", PassthroughPlane),
+                     ("hybrid", PassthroughPlane), ("wfq", WFQPlane)):
+        p = mk_plane(pol)
+        try:
+            assert isinstance(p, cls)
+            assert p.log_ops == (pol != "bev")
+        finally:
+            p.shutdown()
+    with pytest.raises(ValueError):
+        make_data_plane("round-robin")

@@ -63,3 +63,90 @@ def test_decode_matches_forward_argmax(rng_key):
         want.append(nxt)
         toks.append(nxt)
     assert got == want
+
+
+# ===========================================================================
+# Continuous batching
+# ===========================================================================
+
+def test_slot_recycled_mid_decode(rng_key):
+    """3 requests, 2 slots: the third must be admitted into a slot freed
+    by an earlier EOS/budget-exhausted request *mid-decode* (scatter
+    admission), and all three must complete."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(params, model, batch=2, cap=64)
+    r0 = eng.submit(np.arange(10) % CFG.vocab, max_new_tokens=8)
+    r1 = eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=2)
+    r2 = eng.submit(np.arange(4) % CFG.vocab, max_new_tokens=3)
+    done = eng.run_round(params)
+    assert {r.rid for r in done} == {r0, r1, r2}
+    assert len(eng.completed[r0].out_tokens) == 8
+    assert len(eng.completed[r1].out_tokens) == 2
+    assert len(eng.completed[r2].out_tokens) == 3
+    # r2 could only have been admitted after r1's slot freed
+    assert eng.stats.scatter_admissions >= 1
+    assert eng.stats.full_prefills == 1
+    # all slots recycled at the end
+    assert all(s is None for s in eng.slots)
+
+
+def test_continuous_matches_static_greedy(rng_key):
+    """A request decoded alongside churning neighbors must produce the
+    same greedy continuation as when served alone — slot recycling must
+    not disturb live KV state."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    prompt = np.asarray(jax.random.randint(rng_key, (8,), 0, CFG.vocab))
+
+    solo = _engine(params, model, batch=1, cap=64)
+    solo.submit(prompt, max_new_tokens=6)
+    solo.run_round(params)
+    want = solo.completed[0].out_tokens
+
+    eng = _engine(params, model, batch=2, cap=64)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    eng.submit(np.arange(8) % CFG.vocab, max_new_tokens=1)   # churn slot 1
+    eng.submit(np.arange(8) % CFG.vocab, max_new_tokens=1)
+    eng.submit(np.arange(8) % CFG.vocab, max_new_tokens=1)
+    eng.run_round(params)
+    assert eng.completed[rid].out_tokens == want
+
+
+def test_step_api_and_completion_future(rng_key):
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(params, model, batch=2, cap=64)
+    rid = eng.submit(np.arange(5) % CFG.vocab, max_new_tokens=2)
+    fut = eng.future(rid)
+    assert not fut.done()
+    while eng.has_work():
+        eng.step(params)
+    req = fut.result(timeout=5)
+    assert req.rid == rid and req.done
+    assert len(req.out_tokens) == 2
+
+
+def test_late_submit_joins_mid_round(rng_key):
+    """A request submitted after stepping begins is admitted into a
+    freed slot without restarting the round."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(params, model, batch=1, cap=64)
+    eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=2)
+    eng.step(params)
+    late = eng.submit(np.arange(7) % CFG.vocab, max_new_tokens=2)
+    while eng.has_work():
+        eng.step(params)
+    assert late in eng.completed
+    assert len(eng.completed[late].out_tokens) == 2
+
+
+def test_zero_token_budget(rng_key):
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(params, model, batch=2, cap=64)
+    rid = eng.submit(np.arange(4) % CFG.vocab, max_new_tokens=0)
+    done = eng.run_round(params)
+    assert eng.completed[rid].out_tokens == []
+    assert {r.rid for r in done} == {rid}

@@ -57,3 +57,45 @@ def test_unhandled_source_stays_pending():
     cq.raise_event(5, "orphan")
     assert cq.status & (1 << 5)
     assert len(cq.pending()) == 1
+
+
+def test_delivery_is_not_reentrant():
+    """Regression: a handler raising a follow-up event (or the unmask at
+    ISR exit) must not recursively re-enter delivery — events are
+    drained iteratively, in order, by a single delivery loop."""
+    cq = CompletionQueue()
+    depth = {"cur": 0, "max": 0}
+    got = []
+
+    def handler(ev):
+        depth["cur"] += 1
+        depth["max"] = max(depth["max"], depth["cur"])
+        got.append(ev.kind)
+        if ev.kind == "first":
+            # raising from inside the ISR re-enters raise_event →
+            # _deliver_pending; the active loop must absorb it
+            cq.raise_event(7, "second")
+            cq.raise_event(7, "third")
+        depth["cur"] -= 1
+
+    cq.set_irq(7, handler)
+    cq.raise_event(7, "first")
+    assert got == ["first", "second", "third"]
+    assert depth["max"] == 1                    # never nested
+    assert cq.status == 0 and not cq.pending()
+
+
+def test_delivery_deep_event_chain_no_recursion_error():
+    """1000 chained handler-raised events must not blow the stack."""
+    cq = CompletionQueue(depth=2048)
+    count = {"n": 0}
+
+    def handler(ev):
+        count["n"] += 1
+        if count["n"] < 1000:
+            cq.raise_event(2, "again")
+
+    cq.set_irq(2, handler)
+    cq.raise_event(2, "start")
+    assert count["n"] == 1000
+    assert not cq.pending()

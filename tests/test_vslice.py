@@ -2,7 +2,10 @@
 fragmentation metric — unit + hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to seeded-random sweeps
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.vslice import Floorplanner, SliceSpec, VSlice
 
