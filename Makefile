@@ -1,15 +1,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fairness bench
+.PHONY: test smoke fairness bench bench-paged
 
 test:            ## tier-1 verify
 	$(PY) -m pytest -x -q
 
-smoke: test fairness   ## tier-1 + scheduler-fairness quick check
+smoke: test fairness bench-paged   ## tier-1 + quick benchmark checks
 
 fairness:        ## WFQ vs broker vs passthrough share table (quick)
 	$(PY) benchmarks/scheduler_fairness.py --quick
+
+bench-paged:     ## paged vs legacy serving: admission latency + tok/s
+	$(PY) benchmarks/paged_kv.py --quick
 
 bench:           ## full benchmark harness (CSV)
 	$(PY) benchmarks/run.py

@@ -17,6 +17,15 @@ paper's 8 GB Arria-10 board (DESIGN.md §9).
 Isolation: every allocation records its owner; ``free``/``translate``
 validate ownership and quota, and violations feed the IsolationAuditor —
 this is the enforcement half of the paper's software-side data protection.
+
+Paging: beyond the paper's contiguous first-fit segments, the pool also
+serves *page-granular* allocations through a per-handle ``PageTable``
+(logical block index → physical page, one page = one segment, no
+contiguity requirement). This is the substrate for the paged KV cache in
+``repro.serving.paged_kv``: a serving slot leases pages on admission,
+grows its table on demand (counted as ``page_faults``), and returns the
+pages on EOS — making serving memory tenant-accountable through the same
+ownership/quota machinery as plain segment allocations.
 """
 from __future__ import annotations
 
@@ -92,6 +101,13 @@ class BitmapAllocator:
     def free_segments(self) -> int:
         return int((~self.used).sum())
 
+    def largest_free_run(self) -> int:
+        best = run = 0
+        for u in self.used:
+            run = 0 if u else run + 1
+            best = max(best, run)
+        return best
+
 
 class FreelistAllocator:
     """The paper's proposed improvement: sorted list of free runs."""
@@ -123,6 +139,9 @@ class FreelistAllocator:
 
     def free_segments(self) -> int:
         return sum(l for _, l in self.runs)
+
+    def largest_free_run(self) -> int:
+        return max((l for _, l in self.runs), default=0)
 
 
 class BuddyAllocator:
@@ -195,6 +214,22 @@ class BuddyAllocator:
         real = sum((1 << o) * len(lst) for o, lst in self.free_lists.items())
         return real
 
+    def largest_free_run(self) -> int:
+        # adjacent non-buddy free blocks form one contiguous run even
+        # though the buddy system never coalesces them
+        blocks = sorted((start, 1 << o)
+                        for o, lst in self.free_lists.items()
+                        for start in lst)
+        best = 0
+        run_start = run_end = None
+        for start, length in blocks:
+            if run_end == start:
+                run_end += length
+            else:
+                run_start, run_end = start, start + length
+            best = max(best, run_end - run_start)
+        return best
+
 
 BACKENDS = {"bitmap": BitmapAllocator, "freelist": FreelistAllocator,
             "buddy": BuddyAllocator}
@@ -212,9 +247,34 @@ class MMUStats:
     denied: int = 0
     alloc_ns_total: int = 0
     peak_segs: int = 0
+    # paging counters (PageTable API)
+    pages_allocated: int = 0
+    pages_freed: int = 0
+    page_faults: int = 0            # demand growths of a live page table
 
     def alloc_latency_us(self):
         return (self.alloc_ns_total / max(self.allocs, 1)) / 1e3
+
+
+@dataclass
+class PageTable:
+    """Per-handle logical→physical page map (one page = one segment).
+
+    Unlike ``Allocation`` there is no contiguity: each logical block index
+    maps to an arbitrary physical page, so a table can grow on demand
+    without relocation — the property the paged KV cache relies on.
+    """
+
+    handle: int
+    owner: str
+    pages: List[int] = field(default_factory=list)
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages)
+
+    def lookup(self, logical: int) -> int:
+        return self.pages[logical]
 
 
 class SegmentPool:
@@ -227,7 +287,9 @@ class SegmentPool:
         self.backend_name = backend
         self.alloc_backend = BACKENDS[backend](self.n_segments)
         self.allocations: Dict[int, Allocation] = {}
+        self.page_tables: Dict[int, PageTable] = {}
         self.quota_segs: Dict[str, int] = {}
+        self.denied_by_owner: Dict[str, int] = {}
         self.stats = MMUStats()
         self.auditor = auditor
         self._next_handle = 0
@@ -237,9 +299,19 @@ class SegmentPool:
     def set_quota(self, owner: str, n_bytes: int):
         self.quota_segs[owner] = -(-n_bytes // self.segment_bytes)
 
+    def clear_quota(self, owner: str):
+        self.quota_segs.pop(owner, None)
+
     def _owner_segs(self, owner: str) -> int:
-        return sum(a.n_segs for a in self.allocations.values()
+        segs = sum(a.n_segs for a in self.allocations.values()
                    if a.owner == owner)
+        segs += sum(t.n_pages for t in self.page_tables.values()
+                    if t.owner == owner)
+        return segs
+
+    def _deny(self, owner: str):
+        self.stats.denied += 1
+        self.denied_by_owner[owner] = self.denied_by_owner.get(owner, 0) + 1
 
     def alloc(self, n_bytes: int, owner: str) -> Allocation:
         n_segs = max(1, -(-n_bytes // self.segment_bytes))
@@ -247,7 +319,7 @@ class SegmentPool:
         with self._lock:
             q = self.quota_segs.get(owner)
             if q is not None and self._owner_segs(owner) + n_segs > q:
-                self.stats.denied += 1
+                self._deny(owner)
                 if self.auditor:
                     self.auditor.record("quota_exceeded", owner,
                                         {"ask_segs": n_segs, "quota": q})
@@ -286,31 +358,148 @@ class SegmentPool:
             self.stats.frees += 1
 
     def translate(self, handle: int, owner: str, offset: int = 0) -> int:
-        """handle+offset → byte address, with ownership + bounds check."""
-        a = self.allocations.get(handle)
-        if a is None:
-            raise MMUError(f"unknown handle {handle}")
-        if a.owner != owner:
+        """handle+offset → byte address, with ownership + bounds check.
+
+        Holds the pool lock: ``self.allocations`` must not be read racily
+        against a concurrent ``free()`` (handle reuse / mid-delete).
+        """
+        with self._lock:
+            a = self.allocations.get(handle)
+            if a is None:
+                raise MMUError(f"unknown handle {handle}")
+            if a.owner != owner:
+                self.stats.denied += 1
+                if self.auditor:
+                    self.auditor.record("cross_owner_access", owner,
+                                        {"handle": handle,
+                                         "real_owner": a.owner})
+                raise IsolationViolation(
+                    f"{owner} cannot access {a.owner}'s memory")
+            if not (0 <= offset < a.n_bytes):
+                self.stats.denied += 1
+                raise IsolationViolation(
+                    f"offset {offset} outside allocation of {a.n_bytes} bytes")
+            return a.start_seg * self.segment_bytes + offset
+
+    # ==================================================================
+    # Page-table API (page = one segment, no contiguity — the paged KV
+    # cache substrate; see module docstring)
+    # ==================================================================
+    def _alloc_single_pages(self, n: int, owner: str) -> List[int]:
+        """n single-segment pages, or raise (lock held by caller)."""
+        q = self.quota_segs.get(owner)
+        if q is not None and self._owner_segs(owner) + n > q:
+            self._deny(owner)
+            if self.auditor:
+                self.auditor.record("quota_exceeded", owner,
+                                    {"ask_pages": n, "quota": q})
+            raise QuotaExceeded(f"{owner}: {n} pages over quota {q}")
+        pages: List[int] = []
+        for _ in range(n):
+            start = self.alloc_backend.alloc(1)
+            if start is None:
+                for p in pages:                      # roll back partial
+                    self.alloc_backend.free(p, 1)
+                self.stats.denied += 1
+                raise OutOfMemory(
+                    f"{owner}: {n} pages; "
+                    f"{self.alloc_backend.free_segments()} free")
+            pages.append(start)
+        self.stats.pages_allocated += n
+        used = self.n_segments - self.alloc_backend.free_segments()
+        self.stats.peak_segs = max(self.stats.peak_segs, used)
+        return pages
+
+    def alloc_pages(self, n: int, owner: str) -> PageTable:
+        """Lease ``n`` pages under a fresh page table (quota-checked)."""
+        with self._lock:
+            pages = self._alloc_single_pages(n, owner)
+            h = self._next_handle
+            self._next_handle += 1
+            t = PageTable(h, owner, pages)
+            self.page_tables[h] = t
+            return t
+
+    def grow_pages(self, handle: int, owner: str, n: int = 1) -> PageTable:
+        """Demand-grow a live table by ``n`` pages (a page fault)."""
+        with self._lock:
+            t = self._check_table(handle, owner, "cross_owner_grow")
+            t.pages.extend(self._alloc_single_pages(n, owner))
+            self.stats.page_faults += 1
+            return t
+
+    def free_pages(self, handle: int, owner: str):
+        with self._lock:
+            t = self._check_table(handle, owner, "cross_owner_free")
+            for p in t.pages:
+                self.alloc_backend.free(p, 1)
+            self.stats.pages_freed += t.n_pages
+            self.stats.frees += 1
+            del self.page_tables[handle]
+
+    def translate_page(self, handle: int, owner: str, logical: int) -> int:
+        """logical block index → physical byte address (ownership +
+        bounds checked — the per-access isolation gate)."""
+        with self._lock:
+            t = self._check_table(handle, owner, "cross_owner_access")
+            if not (0 <= logical < t.n_pages):
+                self.stats.denied += 1
+                raise IsolationViolation(
+                    f"logical block {logical} outside table of "
+                    f"{t.n_pages} pages")
+            return t.pages[logical] * self.segment_bytes
+
+    def _check_table(self, handle: int, owner: str, event: str) -> PageTable:
+        t = self.page_tables.get(handle)
+        if t is None:
+            raise MMUError(f"unknown page table {handle}")
+        if t.owner != owner:
             self.stats.denied += 1
             if self.auditor:
-                self.auditor.record("cross_owner_access", owner,
+                self.auditor.record(event, owner,
                                     {"handle": handle,
-                                     "real_owner": a.owner})
+                                     "real_owner": t.owner})
             raise IsolationViolation(
-                f"{owner} cannot access {a.owner}'s memory")
-        if not (0 <= offset < a.n_bytes):
-            self.stats.denied += 1
-            raise IsolationViolation(
-                f"offset {offset} outside allocation of {a.n_bytes} bytes")
-        return a.start_seg * self.segment_bytes + offset
+                f"{owner} cannot touch {t.owner}'s page table")
+        return t
+
+    def pages_in_use(self) -> int:
+        return sum(t.n_pages for t in self.page_tables.values())
 
     # ------------------------------------------------------------------
     def utilization(self) -> float:
         return 1.0 - self.alloc_backend.free_segments() / self.n_segments
 
+    def fragmentation(self) -> float:
+        """External fragmentation: 1 − largest free run / free segments."""
+        free = self.alloc_backend.free_segments()
+        if free == 0:
+            return 0.0
+        return 1.0 - self.alloc_backend.largest_free_run() / free
+
+    def memory_stats(self) -> dict:
+        """Paging/occupancy snapshot for VMM.stats()['memory']."""
+        with self._lock:
+            return {
+                "segments_total": self.n_segments,
+                "segments_in_use":
+                    self.n_segments - self.alloc_backend.free_segments(),
+                "pages_in_use": self.pages_in_use(),
+                "page_tables": len(self.page_tables),
+                "page_faults": self.stats.page_faults,
+                "pages_allocated": self.stats.pages_allocated,
+                "pages_freed": self.stats.pages_freed,
+                "fragmentation": self.fragmentation(),
+                "quota_denials": dict(self.denied_by_owner),
+            }
+
     def overlaps_ok(self) -> bool:
-        """Invariant: no two live allocations overlap (property tests)."""
-        spans = sorted((a.start_seg, a.start_seg + a.n_segs)
-                       for a in self.allocations.values())
+        """Invariant: no two live allocations/pages overlap (property
+        tests) — contiguous spans and single-segment pages together."""
+        spans = sorted(
+            [(a.start_seg, a.start_seg + a.n_segs)
+             for a in self.allocations.values()]
+            + [(p, p + 1) for t in self.page_tables.values()
+               for p in t.pages])
         return all(spans[i][1] <= spans[i + 1][0]
                    for i in range(len(spans) - 1))

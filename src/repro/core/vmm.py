@@ -353,8 +353,14 @@ class VMM:
         self.plane.shutdown()
 
     def stats(self) -> dict:
+        with self._lock:
+            tenants = dict(self.tenants)
         return {
-            "tenants": len(self.tenants),
+            "tenants": len(tenants),
+            # per-tenant MMU paging view (pages in use, fragmentation,
+            # quota denials) — the SLO scheduler follow-up reads this
+            "memory": {name: t.pool.memory_stats()
+                       for name, t in tenants.items()},
             "floorplan_util": self.floorplanner.utilization(),
             "fragmentation": self.floorplanner.fragmentation(),
             "compile_hits": self.compiler.hits,

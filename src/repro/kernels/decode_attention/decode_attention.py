@@ -6,6 +6,22 @@ whole sweep. Validity masking (ring caches that are not yet full) comes
 from a scalar `pos` operand placed in SMEM. Decode is HBM-bandwidth-bound:
 the kernel's roofline is the cache-read stream, which is why the block
 size is large (maximize DMA efficiency, compute is negligible).
+
+Two cache layouts share the online-softmax body:
+
+* ``decode_attention``       — contiguous per-slot ring caches
+  (B, Hkv, C, hd) with one shared scalar ``pos`` (the reference).
+* ``paged_decode_attention`` — a shared physical page pool
+  (num_pages, page_size, Hkv, hd) plus per-slot block tables and lengths.
+  Both the block table and the lengths vector are scalar-prefetched into
+  SMEM so each grid step's page index is known before the body runs — the
+  page DMA address is computed from the table, which is what makes the
+  virtual→physical walk free. Pages are linear (token t of slot b lives
+  at page ``bt[b, t // ps]``, offset ``t % ps``; no ring), so validity is
+  a simple ``t < lengths[b]`` mask and out-of-table grid steps (padded
+  block-table entries) mask to -inf and contribute nothing.
+  ``page_size`` should be a multiple of the 128-lane tile on real TPU;
+  small pages are fine in interpret mode.
 """
 from __future__ import annotations
 
@@ -98,3 +114,92 @@ def decode_attention(q, k, v, pos, *, window=0, interpret=False, bkv=BKV):
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(pos_arr, q, k, v)
+
+
+# ===========================================================================
+# Paged variant: block-table walk over a shared physical page pool
+# ===========================================================================
+
+
+def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, ps, nb, window, hq):
+    g = pl.program_id(0)                              # b * Hq + h
+    j = pl.program_id(1)                              # logical block index
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # (1, hd)
+    k = k_ref[0, :, 0]                                # (ps, hd)
+    v = v_ref[0, :, 0]
+    length = len_ref[g // hq]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    tok = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    valid = tok < length                              # linear, no ring
+    if window > 0:
+        valid &= tok >= length - window
+    s = jnp.where(valid, s, _NEG)
+    m_prev = m_ref[:1, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:1, :1], 1e-30)).astype(
+                           o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables, *,
+                           window=0, interpret=False):
+    """q: (B,Hq,1,hd); k/v pages: (P, page_size, Hkv, hd) shared pool;
+    lengths: (B,) int32 valid-token counts (0 = dead slot → zero out);
+    block_tables: (B, nb) int32 logical block → physical page (pad with
+    any in-range page; padded entries are masked by ``lengths``)."""
+    B, Hq, _, hd = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    nb = block_tables.shape[1]
+    grid = (B * Hq, nb)
+
+    kernel = functools.partial(_paged_kernel, scale=hd ** -0.5, ps=ps,
+                               nb=nb, window=window, hq=Hq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda g, j, lens, bt: (g // Hq, g % Hq, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda g, j, lens, bt:
+                         (bt[g // Hq, j], 0, (g % Hq) // G, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda g, j, lens, bt:
+                         (bt[g // Hq, j], 0, (g % Hq) // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda g, j, lens, bt:
+                               (g // Hq, g % Hq, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q, k_pages, v_pages)

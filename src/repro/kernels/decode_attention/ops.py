@@ -1,14 +1,32 @@
-"""Public wrapper (model cache layout (B,C,H,hd) ↔ kernel (B,H,C,hd))."""
+"""Public wrapper (model cache layout (B,C,H,hd) ↔ kernel (B,H,C,hd)).
+
+Dispatches on cache type: a contiguous per-slot cache (B,C,Hkv,hd) with a
+shared scalar ``pos`` takes the reference ring-cache kernel; passing
+``block_tables`` selects the paged kernel, where the cache is a shared
+physical page pool (num_pages, page_size, Hkv, hd) and ``pos`` is the
+per-slot ``lengths`` vector (B,).
+"""
 import jax.numpy as jnp
 
 from repro.kernels.common import use_interpret
-from repro.kernels.decode_attention.decode_attention import (BKV,
-                                                             decode_attention)
+from repro.kernels.decode_attention.decode_attention import (
+    BKV, decode_attention, paged_decode_attention)
 
 
-def decode_attention_op(q, k_cache, v_cache, pos, *, window=0):
-    """q: (B,1,Hq,hd); caches: (B,C,Hkv,hd); pos () int32."""
+def decode_attention_op(q, k_cache, v_cache, pos, *, window=0,
+                        block_tables=None):
+    """q: (B,1,Hq,hd).
+
+    Contiguous: caches (B,C,Hkv,hd); pos () int32 shared position.
+    Paged (``block_tables`` given): caches (P,ps,Hkv,hd) page pools;
+    pos (B,) int32 per-slot valid lengths; block_tables (B,nb) int32.
+    """
     qt = q.transpose(0, 2, 1, 3)
+    if block_tables is not None:
+        out = paged_decode_attention(
+            qt, k_cache, v_cache, jnp.asarray(pos, jnp.int32),
+            block_tables, window=window, interpret=use_interpret())
+        return out.transpose(0, 2, 1, 3)
     kt = k_cache.transpose(0, 2, 1, 3)
     vt = v_cache.transpose(0, 2, 1, 3)
     C = kt.shape[2]

@@ -22,3 +22,32 @@ def decode_attention_ref(q, k, v, pos, *, window=0):
     s = jnp.where(valid[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, lengths, block_tables,
+                               *, window=0):
+    """Gather-based oracle for the paged kernel (linear token layout:
+    token t of slot b lives at page bt[b, t//ps], offset t%ps).
+
+    q: (B,Hq,1,hd); pages: (P, ps, Hkv, hd); lengths (B,); bt (B, nb).
+    Rows with ``lengths == 0`` return zeros (dead serving slots).
+    """
+    B, Hq, _, hd = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    nb = block_tables.shape[1]
+    S = nb * ps
+    k = k_pages[block_tables].reshape(B, S, Hkv, hd)     # (B, S, Hkv, hd)
+    v = v_pages[block_tables].reshape(B, S, Hkv, hd)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr) / np.sqrt(hd)
+    tok = jnp.arange(S)
+    valid = tok[None] < lengths[:, None]
+    if window > 0:
+        valid &= tok[None] >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None], p, 0.0)          # dead rows → 0
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

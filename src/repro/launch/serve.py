@@ -1,4 +1,4 @@
-"""Serving driver: continuous-batching prefill+decode via ServeEngine.
+"""Serving driver: continuous batching over the paged KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 8 --max-new 16
@@ -6,8 +6,12 @@
     ... --virtualized --policy wfq   # weighted-fair-queued data plane
 
 Requests are submitted with varying prompt lengths and token budgets;
-the engine admits them into batch slots as earlier requests hit EOS, so
-slot recycling is visible in the per-request completion log.
+the engine admits them into batch slots as earlier requests hit EOS —
+each newcomer prefills alone into pages leased from the MMU, so slot
+recycling and page faults are visible in the completion log. Under
+``--virtualized`` the KV pages lease real segments from the tenant's
+``SegmentPool``, so ``vmm.stats()["memory"]`` shows serving memory as
+tenant-accountable pages.
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--virtualized", action="store_true")
     ap.add_argument("--policy", default="hybrid",
@@ -41,14 +46,6 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     cap = args.capacity
-
-    def prefill_fn_raw(p, batch):
-        return model.prefill(p, batch, capacity=cap)
-
-    decode_fn_raw = model.decode
-    prefill_fn = jax.jit(prefill_fn_raw)
-    decode_fn = jax.jit(decode_fn_raw, donate_argnums=(1,))
-
     extra = {}
     rng = np.random.default_rng(0)
     if cfg.family == "vlm":
@@ -63,23 +60,10 @@ def main():
     if args.virtualized:
         from jax.sharding import Mesh
         from repro.core import VMM
-        from repro.core.reconfig import Bitfile, ProgramRequest
         devs = np.array(jax.devices()[:1]).reshape(1, 1)
         vmm = VMM(Mesh(devs, ("data", "model")), policy=args.policy)
         tenant = vmm.create_vm("server", (1, 1))
         tenant.device.open()
-        # load prefill as the tenant program; decode via a second tenant op
-        # (both pass through the VMM data plane)
-        pf = prefill_fn
-        df = decode_fn
-
-        def prefill_v(p, b):
-            tenant.program = _Prog(pf)
-            return tenant.device.run(p, b)
-
-        def decode_v(p, c, t, pos):
-            tenant.program = _Prog(df)
-            return tenant.device.run(p, c, t, pos)
 
         class _Prog:
             def __init__(self, fn):
@@ -88,11 +72,23 @@ def main():
             def __call__(self, *a):
                 return self.fn(*a)
 
-        engine = ServeEngine(cfg, args.batch, cap, prefill_v, decode_v,
+        # every prefill/decode step passes through the VMM data plane,
+        # and KV pages lease real segments from the tenant's MMU pool
+        def mediate(fn):
+            prog = _Prog(fn)
+
+            def run(*a):
+                tenant.program = prog
+                return tenant.device.run(*a)
+            return run
+
+        engine = ServeEngine(cfg, model, args.batch, cap,
+                             page_size=args.page_size, pool=tenant.pool,
+                             prefill_wrap=mediate, decode_wrap=mediate,
                              extra_batch=extra)
     else:
-        engine = ServeEngine(cfg, args.batch, cap, prefill_fn, decode_fn,
-                             extra_batch=extra)
+        engine = ServeEngine(cfg, model, args.batch, cap,
+                             page_size=args.page_size, extra_batch=extra)
 
     for i in range(args.requests):
         plen = args.prompt_len + int(rng.integers(0, 8))
@@ -116,8 +112,10 @@ def main():
     s = engine.stats
     print(f"[serve] {done} requests, {new_tokens} tokens in {dt:.2f}s "
           f"({new_tokens / max(dt, 1e-9):.1f} tok/s)")
-    print(f"[serve] engine: {s.steps} steps, {s.full_prefills} prefills, "
-          f"{s.scatter_admissions} mid-decode admissions")
+    print(f"[serve] engine: {s.steps} steps, {s.prefills} newcomer "
+          f"prefills (full={s.full_prefills}), {s.page_faults} page "
+          f"faults, {s.pages_leased} pages leased / {s.pages_freed} freed")
+    print(f"[serve] kv memory: {engine.kv.memory_stats()}")
     if args.virtualized:
         print("[serve] vmm stats:", vmm.stats())
         vmm.shutdown()

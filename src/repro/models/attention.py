@@ -338,6 +338,69 @@ def attn_decode(cfg, p, x1, cache, pos, *, window=0, mesh=None):
     return y, {"k": ck, "v": cv}
 
 
+def attn_decode_paged(cfg, p, x1, pools, positions, block_tables, *,
+                      window=0):
+    """Paged decode: one token per slot against a shared physical page
+    pool (the serving engine's MMU-leased KV memory).
+
+    x1 (B,1,D); pools {"k","v"} (num_pages, page_size, Hkv, hd);
+    positions (B,) int32 — write position per slot, -1 for a dead slot
+    (its write is dropped and its attention output is zeros);
+    block_tables (B, nb) int32 — logical block → physical page, padded
+    with any in-range page (masked by length).
+
+    Token layout is linear (token t of slot b lives at page
+    ``bt[b, t // ps]`` offset ``t % ps``) — no ring: a slot's pages are
+    leased up-front for its prompt and grown on demand, so sliding-window
+    masking is a simple ``t >= len - window``. Returns (y, pools').
+    """
+    B = x1.shape[0]
+    P, ps, Hkv, hd = pools["k"].shape
+    q, k, v = _project_qkv(cfg, p, x1)
+    pos_c = jnp.clip(positions, 0, None)
+    if cfg.use_rope:
+        q = apply_rope(q, pos_c[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos_c[:, None], cfg.rope_theta)
+
+    nb = block_tables.shape[1]
+    blk = jnp.clip(pos_c // ps, 0, nb - 1)
+    page = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    # dead slots scatter to the out-of-range sentinel page → dropped
+    page = jnp.where(positions >= 0, page, P)
+    off = pos_c % ps
+    ck = pools["k"].at[page, off].set(k[:, 0], mode="drop")
+    cv = pools["v"].at[page, off].set(v[:, 0], mode="drop")
+    lengths = jnp.maximum(positions + 1, 0)          # dead slot → 0
+
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention.ops import decode_attention_op
+        o = decode_attention_op(q, ck, cv, lengths, window=window,
+                                block_tables=block_tables)
+        return _out_proj(cfg, p, o), {"k": ck, "v": cv}
+
+    # XLA fallback: gather the slot's pages, grouped-GQA single-token
+    # attention with a linear validity mask (interpret-free CI path).
+    S = nb * ps
+    kb = ck[block_tables].reshape(B, S, Hkv, hd)
+    vb = cv[block_tables].reshape(B, S, Hkv, hd)
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   kb.astype(jnp.float32)) * scale
+    tok = jnp.arange(S)
+    valid = tok[None] < lengths[:, None]
+    if window > 0:
+        valid &= tok[None] >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    pr = jnp.where(valid[:, None, None], pr, 0.0)     # dead slots → zeros
+    o = jnp.einsum("bhgk,bkhd->bhgd", pr.astype(vb.dtype), vb)
+    y = _out_proj(cfg, p, o.reshape(B, 1, Hq, hd))
+    return y, {"k": ck, "v": cv}
+
+
 def _cache_seq_axes(mesh, B, Hkv):
     """Mirror of partition.cache_pspecs: which axes shard the cache seq
     dim, and which shard the batch dim."""

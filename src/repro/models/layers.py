@@ -114,11 +114,12 @@ def add_abs_positions(x, pos0=0):
 
 
 def abs_position_vector(pos, d):
-    """Single-position sinusoidal embedding with traced ``pos`` (decode)."""
+    """Sinusoidal embedding with traced ``pos`` (decode): scalar → (d,),
+    per-slot positions (B,) → (B, d)."""
     half = d // 2
     freqs = jnp.exp(-jnp.log(10000.0)
                     * jnp.arange(half, dtype=jnp.float32) / half)
-    ang = pos.astype(jnp.float32) * freqs
+    ang = jnp.asarray(pos, jnp.float32)[..., None] * freqs
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
 
 

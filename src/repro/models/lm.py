@@ -12,6 +12,17 @@ Caches: every layer kind owns a cache pytree —
   rwkv     : {"shift" (B,d), "s" (B,H,dk,dk) fp32}
   channelmix ffn: {"shift" (B,d)}
   cross-attn (enc-dec): {"k","v"} (B, S_enc, H, hd) — static after prefill
+
+Paged serving state (``init_paged_state`` / ``apply_stack_decode`` with a
+paged ctx): the attn/swa leaves become *shared physical page pools*
+(num_pages, page_size, Hkv, hd) with per-slot block tables owned by the
+serving engine's ``PagedKVCache`` — one block table shared by every
+layer, one pool per layer (scan segments stack pools on a leading
+periods axis, exactly like the contiguous caches). All non-attention
+leaves keep their per-slot batch row layout. ``write_prefill_to_state``
+scatters one freshly-prefilled request (a batch=1 contiguous cache) into
+its leased pages / batch row without touching any other slot — the
+O(newcomer) admission primitive.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
@@ -128,6 +140,21 @@ def init_layer_cache(cfg, spec: LayerSpec, batch, capacity, enc_len=0):
     return c
 
 
+def init_layer_paged(cfg, spec: LayerSpec, batch, num_pages, page_size,
+                     enc_len=0):
+    """Like ``init_layer_cache`` but attn/swa leaves are shared page
+    pools (no batch dim — slots own *pages*, not rows)."""
+    cd = dt(cfg.compute_dtype)
+    c = init_layer_cache(cfg, spec, batch, 1, enc_len=enc_len)
+    if spec.mixer in ("attn", "swa"):
+        c["mixer"] = {
+            "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                            cfg.d_head), cd),
+            "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                            cfg.d_head), cd)}
+    return c
+
+
 # ---------------------------------------------------------------------------
 # Per-layer apply
 # ---------------------------------------------------------------------------
@@ -202,9 +229,14 @@ def apply_layer_decode(cfg, spec, p, x, cache, ctx):
     new_cache = dict(cache)
     if spec.mixer in ("attn", "swa"):
         window = cfg.window if spec.mixer == "swa" else 0
-        y, new_cache["mixer"] = attn.attn_decode(
-            cfg, p["mixer"], h, cache["mixer"], pos, window=window,
-            mesh=ctx.get("mesh"))
+        if ctx.get("block_tables") is not None:       # paged serving path
+            y, new_cache["mixer"] = attn.attn_decode_paged(
+                cfg, p["mixer"], h, cache["mixer"], ctx["positions"],
+                ctx["block_tables"], window=window)
+        else:
+            y, new_cache["mixer"] = attn.attn_decode(
+                cfg, p["mixer"], h, cache["mixer"], pos, window=window,
+                mesh=ctx.get("mesh"))
     elif spec.mixer == "rglru":
         y, new_cache["mixer"] = rec.rglru_decode(
             cfg, p["mixer"], h, cache["mixer"])
@@ -269,6 +301,77 @@ def init_stack_cache(cfg, specs, batch, capacity, enc_len=0):
             out.append(jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one))
     return out
+
+
+def init_paged_state(cfg, specs, batch, num_pages, page_size, enc_len=0):
+    """Paged serving state: attn/swa → shared page pools, everything else
+    per-slot rows. Structure mirrors ``init_stack_cache`` (scan segments
+    stack on a leading periods axis)."""
+    layout = build_layout(cfg, specs)
+    out = []
+    for entry in layout:
+        if entry[0] == "unroll":
+            out.append([init_layer_paged(cfg, s, batch, num_pages,
+                                         page_size, enc_len)
+                        for s in entry[1]])
+        else:
+            _, period, n = entry
+            one = [init_layer_paged(cfg, s, batch, num_pages, page_size,
+                                    enc_len)
+                   for s in period]
+            out.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one))
+    return out
+
+
+def write_prefill_to_state(cfg, specs, state, new_caches, slot, block_row,
+                           length, page_size):
+    """Scatter one newcomer's batch=1 prefill caches into the paged
+    state: K/V tokens ``t < length`` go to page ``block_row[t // ps]``
+    offset ``t % ps`` of each layer's pool; per-slot leaves (recurrent
+    state, cross-attn K/V, channelmix shifts) overwrite row ``slot``.
+    ``slot`` and ``length`` are static (jit per distinct prompt length —
+    the same compile granularity as prefill itself); no other slot's
+    pages or rows are read or written. Returns the updated state."""
+    layout = build_layout(cfg, specs)
+    t = np.arange(length)
+    pages = block_row[t // page_size]                 # (length,) traced
+    offs = jnp.asarray(t % page_size)
+
+    def write_pool(pool, new, scan):
+        # pool (…, P, ps, Hkv, hd); new (…, 1, L, Hkv, hd) with L ≥ length
+        if scan:
+            return pool.at[:, pages, offs].set(new[:, 0, :length])
+        return pool.at[pages, offs].set(new[0, :length])
+
+    def write_row(old, new, scan):
+        if scan:
+            return old.at[:, slot].set(new[:, 0])
+        return old.at[slot].set(new[0])
+
+    def write_layer(spec, sc, nc, scan):
+        out = {}
+        for key, leaf in sc.items():
+            if key == "mixer" and spec.mixer in ("attn", "swa"):
+                out[key] = {kk: write_pool(leaf[kk], nc[key][kk], scan)
+                            for kk in ("k", "v")}
+            else:
+                out[key] = jax.tree.map(
+                    lambda o, n: write_row(o, n, scan), leaf, nc[key])
+        return out
+
+    new_state = []
+    for si, entry in enumerate(layout):
+        if entry[0] == "unroll":
+            new_state.append([
+                write_layer(spec, state[si][li], new_caches[si][li], False)
+                for li, spec in enumerate(entry[1])])
+        else:
+            _, period, n = entry
+            new_state.append([
+                write_layer(spec, state[si][li], new_caches[si][li], True)
+                for li, spec in enumerate(period)])
+    return new_state
 
 
 def _maybe_remat(cfg, fn):

@@ -185,6 +185,51 @@ class Model:
                                    capacity, enc_len=enc_len)
 
     # ------------------------------------------------------------------
+    # Paged serving path (MMU-backed KV pages; see serving/paged_kv.py)
+    # ------------------------------------------------------------------
+    def init_paged_state(self, batch_size, num_pages, page_size,
+                         enc_len=None):
+        """Serving state whose attn/swa leaves are shared page pools
+        (num_pages, page_size, Hkv, hd); per-slot rows elsewhere."""
+        if enc_len is None:
+            enc_len = self.cfg.encoder.seq_len if self.cfg.is_encdec else 0
+        return lm.init_paged_state(self.cfg, self.specs, batch_size,
+                                   num_pages, page_size, enc_len=enc_len)
+
+    def write_prefill_paged(self, state, caches, slot, block_row, length,
+                            page_size):
+        """Scatter a batch=1 prefill cache into slot ``slot``'s leased
+        pages/rows — O(newcomer), no other slot touched."""
+        return lm.write_prefill_to_state(self.cfg, self.specs, state,
+                                         caches, slot, block_row, length,
+                                         page_size)
+
+    def decode_paged(self, params, state, token, positions, block_tables):
+        """token (B,1) int32; positions (B,) int32 per-slot write
+        positions (-1 = dead slot); block_tables (B, nb) int32 →
+        (logits (B,V), state')."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, token)
+        if not cfg.use_rope:
+            pvec = jnp.clip(positions, 0, None)
+            x = x + abs_position_vector(pvec, cfg.d_model)[:, None, :] \
+                .astype(x.dtype)
+        ctx = {"mode": "decode", "pos": positions, "positions": positions,
+               "block_tables": block_tables, "mesh": self.mesh}
+        x, state = lm.apply_stack_decode(cfg, self.specs,
+                                         params["segments"], x, state, ctx)
+        return self._lm_logits(params, x[:, -1:])[:, 0], state
+
+    def kv_page_bytes(self, page_size) -> int:
+        """HBM bytes one KV page spans across all attn/swa layers — the
+        MMU lease granularity for the paged cache."""
+        cfg = self.cfg
+        itemsize = jnp.dtype(dt(cfg.compute_dtype)).itemsize
+        n_attn = sum(1 for s in self.specs if s.mixer in ("attn", "swa"))
+        per_layer = 2 * page_size * cfg.n_kv_heads * cfg.d_head * itemsize
+        return max(1, n_attn) * per_layer
+
+    # ------------------------------------------------------------------
     # Input specs (ShapeDtypeStruct stand-ins for the dry-run)
     # ------------------------------------------------------------------
     def input_specs(self, cell):

@@ -1,3 +1,4 @@
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import EngineStats, Request, ServeEngine
+from repro.serving.paged_kv import PagedKVCache
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["EngineStats", "PagedKVCache", "Request", "ServeEngine"]

@@ -1,40 +1,29 @@
-"""Continuous-batching serving engine: per-slot KV state, per-step
-admission into freed slots, EOS-triggered slot recycling mid-decode.
+"""Continuous-batching serving engine over MMU-backed paged KV memory.
 
-The engine is deliberately runtime-agnostic: it takes *callables* for
-prefill/decode, so the same engine runs
+Each batch slot owns a *position* and a *block table* instead of the
+whole batch sharing one scalar decode position:
 
-* natively  (direct jit'd functions), or
-* virtualized (functions routed through the VMM — the paper's FEV/
-  hybrid/WFQ data plane), which is how benchmarks/fig6a measures
-  virtualization overhead for serving.
+* K/V live in shared physical page pools leased per-request from the
+  software MMU (:class:`repro.serving.paged_kv.PagedKVCache`);
+* admission prefills **only the newcomer** (batch=1, its own length) and
+  scatters the result into freshly leased pages — O(newcomer), zero
+  recompute on occupied slots, no left-padding to a shared position and
+  no full re-prefill fallback (``stats.full_prefills`` stays 0);
+* decode passes a per-slot ``(B,)`` positions vector (-1 marks a dead
+  slot) plus the block tables; EOS recycling frees the slot's pages back
+  to the MMU the moment it finishes.
 
-Request flow: ``submit() → waiting queue → admitted into the first free
-batch slot → prefill → per-step greedy/temperature decode``. Unlike the
-old run-to-completion static batcher, a slot is recycled the moment its
-request hits EOS (or its token budget): the next ``step()`` admits a
-waiting request into the freed slot *mid-decode* without disturbing the
-other slots' KV caches.
-
-Admission mechanics (all slots share one scalar decode position, as the
-model's ``decode(params, caches, token, pos)`` API requires):
-
-* fresh batch (no live slots)      → full prefill at the newcomers'
-  padded prompt length;
-* newcomer prompt ≤ current pos    → the newcomer is prefilled left-
-  padded to the current position and its rows are *scattered* into the
-  live cache pytree (the continuous-batching fast path);
-* newcomer prompt >  current pos   → fall back to re-prefilling every
-  occupied slot's full context (prompt + generated tokens) at a new,
-  longer shared position.
+The engine takes a ``Model`` and jits its prefill / paged-decode entry
+points itself; ``prefill_wrap`` / ``decode_wrap`` let callers interpose
+on the compiled callables — the hook the VMM data plane uses to mediate
+serving steps (benchmarks/fig6a measures that overhead).
 
 ``submit()`` returns a request id; ``future(rid)`` exposes a
-``concurrent.futures.Future`` resolved with the finished ``Request`` —
-the engine-level mirror of the scheduler subsystem's async submit path.
+``concurrent.futures.Future`` resolved with the finished ``Request``.
 """
 from __future__ import annotations
 
-import queue
+import collections
 import threading
 from concurrent.futures import Future
 from dataclasses import dataclass, field
@@ -43,6 +32,9 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.mmu import MMUError
+from repro.serving.paged_kv import PagedKVCache
 
 
 @dataclass
@@ -55,7 +47,7 @@ class Request:
     done: bool = False
 
     def context(self) -> np.ndarray:
-        """Prompt plus everything generated so far (for re-prefill)."""
+        """Prompt plus everything generated so far."""
         if not self.out_tokens:
             return self.prompt
         return np.concatenate(
@@ -66,48 +58,64 @@ class Request:
 class EngineStats:
     steps: int = 0
     decode_steps: int = 0
-    full_prefills: int = 0
-    scatter_admissions: int = 0
+    prefills: int = 0                   # one per admitted newcomer
+    full_prefills: int = 0              # paged engine: must stay 0
     admitted: int = 0
+    deferred: int = 0                   # admissions bounced by the MMU
     completed: int = 0
     generated_tokens: int = 0
+    pages_leased: int = 0
+    pages_freed: int = 0
+    page_faults: int = 0
 
 
 class ServeEngine:
-    def __init__(self, cfg, batch_size: int, capacity: int,
-                 prefill_fn: Callable, decode_fn: Callable,
+    def __init__(self, cfg, model, batch_size: int, capacity: int,
+                 page_size: int = 16, pool=None, auditor=None,
+                 prefill_wrap: Optional[Callable] = None,
+                 decode_wrap: Optional[Callable] = None,
                  extra_batch: Optional[dict] = None, eos_id: int = -1,
                  seed: int = 0):
         self.cfg = cfg
+        self.model = model
         self.B = batch_size
         self.capacity = capacity
-        self.prefill_fn = prefill_fn
-        self.decode_fn = decode_fn
         self.extra_batch = extra_batch or {}
         self.eos_id = eos_id
         self.rng = np.random.default_rng(seed)
         self._rid = 0
-        self.waiting: "queue.Queue[Request]" = queue.Queue()
+        self.waiting: "collections.deque[Request]" = collections.deque()
         self.completed: dict = {}
         self._futures: dict = {}
         self._lock = threading.Lock()
         self.stats = EngineStats()
-        # per-slot decode state (continuous batching)
+        # per-slot decode state: positions (-1 = dead) + MMU-leased pages
         self.slots: List[Optional[Request]] = [None] * batch_size
-        self._caches = None
+        self.positions = np.full(batch_size, -1, np.int32)
+        enc_len = (self.extra_batch["frames"].shape[1]
+                   if "frames" in self.extra_batch else None)
+        self.kv = PagedKVCache(cfg, model, batch_size, capacity,
+                               page_size=page_size, pool=pool,
+                               auditor=auditor, enc_len=enc_len)
         self._logits: Optional[np.ndarray] = None    # (B, V*) host copy
-        self._pos = 0
-        self._cache_axes = None      # per-leaf batch axis (lazy), or False
+        pf = jax.jit(lambda p, b: model.prefill(p, b))
+        df = jax.jit(model.decode_paged, donate_argnums=(1,))
+        self._prefill_fn = prefill_wrap(pf) if prefill_wrap else pf
+        self._decode_fn = decode_wrap(df) if decode_wrap else df
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens, max_new_tokens=16, temperature=0.0):
+        prompt = np.asarray(prompt_tokens, np.int32)
+        if len(prompt) > self.capacity:
+            raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
+                             f"KV capacity {self.capacity}")
         with self._lock:
             rid = self._rid
             self._rid += 1
             self._futures[rid] = Future()
-        req = Request(rid, np.asarray(prompt_tokens, np.int32),
-                      max_new_tokens, temperature)
-        self.waiting.put(req)
+        req = Request(rid, prompt, max_new_tokens, temperature)
+        with self._lock:
+            self.waiting.append(req)
         return rid
 
     def future(self, rid: int) -> Future:
@@ -116,106 +124,55 @@ class ServeEngine:
             return self._futures[rid]
 
     def has_work(self) -> bool:
-        return (not self.waiting.empty()
-                or any(r is not None for r in self.slots))
+        with self._lock:
+            pending = bool(self.waiting)
+        return pending or any(r is not None for r in self.slots)
 
     # ------------------------------------------------------------------
-    # Admission
+    # Admission: prefill the newcomer alone into freshly leased pages
     # ------------------------------------------------------------------
-    def _pad_contexts(self, rows, L) -> np.ndarray:
-        toks = np.zeros((self.B, L), np.int32)
-        for i in rows:
-            ctx = self.slots[i].context()
-            toks[i, L - len(ctx):] = ctx                 # left-pad
-        return toks
-
-    def _prefill(self, params, toks: np.ndarray, L: int):
-        batch = {"tokens": jnp.asarray(toks), **self.extra_batch}
-        logits, caches = self.prefill_fn(params, batch)
-        return np.asarray(jax.device_get(logits), np.float32), caches
+    def _newcomer_batch(self, slot: int, req: Request):
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        for k, v in self.extra_batch.items():         # vlm patches / frames
+            batch[k] = jnp.asarray(v)[slot:slot + 1]
+        return batch
 
     def _admit(self, params):
-        newcomers = []
         for i in range(self.B):
             if self.slots[i] is not None:
                 continue
-            if self.waiting.empty():
+            with self._lock:
+                if not self.waiting:
+                    break
+                req = self.waiting.popleft()
+            owner = f"req{req.rid}"
+            plen = len(req.prompt)
+            try:
+                self.kv.admit(i, owner, plen)
+            except MMUError:
+                # pool exhausted / quota: requeue at the front, retry
+                # next step once EOS recycling returns pages
+                self.stats.deferred += 1
+                with self._lock:
+                    self.waiting.appendleft(req)
+                if all(s is None for s in self.slots):
+                    # no live slot will ever free a page — surface the
+                    # exhaustion instead of busy-spinning run_round()
+                    raise
                 break
-            self.slots[i] = self.waiting.get()
-            newcomers.append(i)
-        if not newcomers:
-            return
-        self.stats.admitted += len(newcomers)
-        live = [i for i in range(self.B)
-                if self.slots[i] is not None and i not in newcomers]
-        if not live or self._caches is None:
-            # fresh batch: everyone prefills together
-            occupied = [i for i in range(self.B) if self.slots[i] is not None]
-            L = max(len(self.slots[i].context()) for i in occupied)
-            self._full_prefill(params, occupied, L)
-        elif all(len(self.slots[i].prompt) <= self._pos for i in newcomers):
-            self._scatter_prefill(params, newcomers)
-        else:
-            occupied = live + newcomers
-            L = max(self._pos,
-                    max(len(self.slots[i].context()) for i in occupied))
-            self._full_prefill(params, occupied, L)
-
-    def _full_prefill(self, params, rows, L):
-        self.stats.full_prefills += 1
-        toks = self._pad_contexts(rows, L)
-        self._logits, self._caches = self._prefill(params, toks, L)
-        self._pos = L
-
-    def _batch_axes(self, params):
-        """Per-cache-leaf batch axis, found by abstractly evaluating
-        prefill at two batch sizes and diffing leaf shapes (a scanned
-        layer stack puts batch at axis 1, so position can't be assumed;
-        with n_layers == B no shape heuristic can disambiguate).
-        ``False`` if detection failed — scatter then falls back to a
-        full re-prefill."""
-        if self._cache_axes is not None:
-            return self._cache_axes
-        try:
-            def abstract_caches(b):
-                batch = {"tokens": jax.ShapeDtypeStruct((b, 8), jnp.int32)}
-                for k, v in self.extra_batch.items():
-                    batch[k] = jax.ShapeDtypeStruct(
-                        (b,) + tuple(np.shape(v))[1:], v.dtype)
-                return jax.eval_shape(self.prefill_fn, params, batch)[1]
-
-            a, b = abstract_caches(self.B), abstract_caches(self.B + 1)
-            self._cache_axes = jax.tree.map(
-                lambda x, y: next(i for i, (m, n)
-                                  in enumerate(zip(x.shape, y.shape))
-                                  if m != n), a, b)
-        except Exception:              # noqa: BLE001 — opaque prefill_fn
-            self._cache_axes = False
-        return self._cache_axes
-
-    def _scatter_prefill(self, params, rows):
-        """Prefill newcomers at the current shared position and scatter
-        their rows into the live cache pytree — no disturbance to the
-        other slots."""
-        axes = self._batch_axes(params)
-        if axes is False:
-            occupied = [i for i in range(self.B)
-                        if self.slots[i] is not None]
-            self._full_prefill(params, occupied, self._pos)
-            return
-        self.stats.scatter_admissions += 1
-        L = self._pos
-        toks = self._pad_contexts(rows, L)
-        logits_new, caches_new = self._prefill(params, toks, L)
-        idx = jnp.asarray(np.asarray(rows, np.int32))
-
-        def merge(old, new, ax):
-            sl = [slice(None)] * old.ndim
-            sl[ax] = idx
-            sl = tuple(sl)
-            return old.at[sl].set(new[sl])
-        self._caches = jax.tree.map(merge, self._caches, caches_new, axes)
-        self._logits[rows] = logits_new[rows]
+            logits, caches = self._prefill_fn(
+                params, self._newcomer_batch(i, req))
+            self.kv.write_prefill(caches, i, plen)
+            logits = np.asarray(jax.device_get(logits), np.float32)
+            if self._logits is None:
+                self._logits = np.zeros((self.B, logits.shape[-1]),
+                                        np.float32)
+            self._logits[i] = logits[0]
+            self.slots[i] = req
+            self.positions[i] = plen                  # next write position
+            self.stats.admitted += 1
+            self.stats.prefills += 1
+            self.stats.pages_leased += self.kv.tables[i].n_pages
 
     # ------------------------------------------------------------------
     # Stepping
@@ -224,6 +181,9 @@ class ServeEngine:
         r = self.slots[i]
         r.done = True
         self.slots[i] = None                      # recycle the slot
+        self.positions[i] = -1
+        self.stats.pages_freed += self.kv.tables[i].n_pages
+        self.kv.release(i)                        # pages back to the MMU
         self.completed[r.rid] = r
         self.stats.completed += 1
         finished.append(r)
@@ -232,9 +192,10 @@ class ServeEngine:
             fut.set_result(r)
 
     def step(self, params) -> List[Request]:
-        """One engine step: admit waiting requests into free slots, emit
-        one token per active slot, recycle EOS/budget-exhausted slots,
-        advance decode. Returns the requests that finished this step."""
+        """One engine step: admit waiting requests into free slots (each
+        prefilled alone into its own pages), emit one token per active
+        slot, recycle EOS/budget-exhausted slots, advance decode with
+        per-slot positions. Returns the requests that finished."""
         finished: List[Request] = []
         self._admit(params)
         active = [i for i in range(self.B) if self.slots[i] is not None]
@@ -254,29 +215,33 @@ class ServeEngine:
             token[i, 0] = tok
             if tok == self.eos_id or len(r.out_tokens) >= r.max_new_tokens:
                 self._finish(i, finished)
+            elif self.positions[i] >= self.capacity:
+                self._finish(i, finished)               # KV budget: truncate
+        for i in [i for i in range(self.B) if self.slots[i] is not None]:
+            try:                                        # demand paging
+                if self.kv.ensure(i, int(self.positions[i])):
+                    self.stats.page_faults = self.kv.pool.stats.page_faults
+            except MMUError:
+                # a shared pool ran dry mid-decode: truncate this slot
+                # (its sampled tokens are already delivered) rather than
+                # wedge the whole batch
+                self._finish(i, finished)
         remaining = [i for i in range(self.B) if self.slots[i] is not None]
         if not remaining:
-            # whole batch drained; any waiting requests get a fresh
-            # prefill on the next step — don't decode a dead batch
-            self._caches, self._logits, self._pos = None, None, 0
-            return finished
-        if self._pos >= self.capacity:
-            # KV capacity exhausted: truncate whatever is still live
-            for i in remaining:
-                self._finish(i, finished)
-            self._caches, self._logits, self._pos = None, None, 0
             return finished
         self.stats.decode_steps += 1
-        logits, self._caches = self.decode_fn(
-            params, self._caches, jnp.asarray(token), jnp.int32(self._pos))
+        logits, self.kv.state = self._decode_fn(
+            params, self.kv.state, jnp.asarray(token),
+            jnp.asarray(self.positions), jnp.asarray(self.kv.block_tables()))
         self._logits = np.asarray(jax.device_get(logits), np.float32)
-        self._pos += 1
+        for i in remaining:
+            self.positions[i] += 1
         return finished
 
     def run_round(self, params) -> List[Request]:
-        """Drain: step until nothing is waiting or in-flight. Kept for
-        the old static-batching call sites; admission now also happens
-        *between* steps, so late ``submit()``s join mid-round."""
+        """Drain: step until nothing is waiting or in-flight. Admission
+        also happens *between* steps, so late ``submit()``s join
+        mid-round."""
         finished: List[Request] = []
         while self.has_work():
             finished.extend(self.step(params))
@@ -284,15 +249,19 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _sample(self, logits, rows):
+        """Vectorized per-row sampling: one argmax for every greedy row;
+        temperature rows via the Gumbel-max trick (argmax of scaled
+        logits + Gumbel noise ≡ softmax sampling) — no Python loop on
+        the per-token hot path."""
         V = self.cfg.vocab
         lg = logits[:, :V]
-        out = np.zeros(logits.shape[0], np.int64)
+        out = np.argmax(lg, axis=-1).astype(np.int64)
+        temps = np.zeros(logits.shape[0])
         for i in rows:
-            t = self.slots[i].temperature
-            if t <= 0.0:
-                out[i] = int(np.argmax(lg[i]))
-            else:
-                p = np.exp((lg[i] - lg[i].max()) / t)
-                p /= p.sum()
-                out[i] = int(self.rng.choice(V, p=p))
+            temps[i] = self.slots[i].temperature
+        hot = [i for i in rows if temps[i] > 0.0]
+        if hot:
+            g = self.rng.gumbel(size=(len(hot), V))
+            scaled = lg[hot] / temps[hot][:, None] + g
+            out[hot] = np.argmax(scaled, axis=-1)
         return out

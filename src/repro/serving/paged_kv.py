@@ -1,0 +1,157 @@
+"""PagedKVCache — MMU-owned paged KV memory for the serving engine.
+
+The paper's §IV.C software MMU virtualizes board DRAM with ownership and
+quota checks; this module routes the serving hot path through it. K/V
+live in shared physical page pools (num_pages, page_size, Hkv, hd) — one
+pool per attention layer, built by ``Model.init_paged_state`` — and every
+serving slot *leases* its pages from a :class:`repro.core.mmu.SegmentPool`
+page table (one page = one MMU segment):
+
+* admission leases ``ceil(prompt_len / page_size)`` pages under the
+  request's owner id (quota-checked → ``QuotaExceeded``; pool-exhausted →
+  ``OutOfMemory``, the engine re-queues the request);
+* decode grows the slot's block table on demand — an MMU page fault;
+* EOS recycling frees the pages back to the pool.
+
+Isolation is per request owner: every block-table access goes through
+``SegmentPool.translate_page``, so touching another slot's mapping raises
+``IsolationViolation`` and feeds the auditor, and the property tests
+assert no physical page is ever mapped by two live slots.
+
+Device-side state layout and the scatter of a freshly-prefilled request
+into its leased pages are delegated to the model (``init_paged_state`` /
+``write_prefill_paged``), so this class stays cache-geometry-agnostic:
+it owns the *mapping*, the model owns the *arrays*.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.mmu import SegmentPool
+from repro.kernels.common import cdiv
+
+
+class PagedKVCache:
+    """Physical page pool + per-slot block tables, leased from an MMU."""
+
+    def __init__(self, cfg, model, batch_size: int, capacity: int,
+                 page_size: int = 16, pool: Optional[SegmentPool] = None,
+                 auditor=None, enc_len: Optional[int] = None):
+        self.cfg = cfg
+        self.model = model
+        self.B = batch_size
+        self.capacity = capacity
+        self.page_size = page_size
+        self.blocks_per_slot = cdiv(capacity, page_size)
+        self.num_pages = batch_size * self.blocks_per_slot
+        self.page_bytes = model.kv_page_bytes(page_size)
+        if pool is None:
+            pool = SegmentPool(total_bytes=self.num_pages * self.page_bytes,
+                               backend="bitmap",
+                               segment_bytes=self.page_bytes,
+                               auditor=auditor)
+        if pool.n_segments < self.num_pages:
+            raise ValueError(
+                f"pool has {pool.n_segments} segments; paged cache needs "
+                f"{self.num_pages} pages (1 page = 1 segment)")
+        self.pool = pool
+        self.state = model.init_paged_state(batch_size, self.num_pages,
+                                            page_size, enc_len=enc_len)
+        self.tables: List[Optional[object]] = [None] * batch_size
+        self.owners: List[Optional[str]] = [None] * batch_size
+        # host-side block-table mirror, fixed width → stable decode shapes
+        self._bt = np.zeros((batch_size, self.blocks_per_slot), np.int32)
+        # slot stays traced: one compile per prompt length (same
+        # granularity as prefill), not per (slot, length) pair
+        self._write = jax.jit(
+            model.write_prefill_paged, donate_argnums=(0,),
+            static_argnames=("length", "page_size"))
+
+    # ------------------------------------------------------------------
+    # Leasing (slot ↔ MMU page table)
+    # ------------------------------------------------------------------
+    def admit(self, slot: int, owner: str, prompt_len: int):
+        """Lease pages for a newcomer's prompt. Raises QuotaExceeded /
+        OutOfMemory without touching any slot state."""
+        assert self.tables[slot] is None, f"slot {slot} still leased"
+        n = max(1, cdiv(prompt_len, self.page_size))
+        # one slot's worth of pages is each request-owner's quota
+        self.pool.set_quota(owner, self.blocks_per_slot
+                            * self.pool.segment_bytes)
+        try:
+            table = self.pool.alloc_pages(n, owner)
+        except Exception:
+            self.pool.clear_quota(owner)     # failed lease: no stale entry
+            raise
+        self.tables[slot] = table
+        self.owners[slot] = owner
+        self._bt[slot, :] = 0
+        self._bt[slot, :n] = table.pages
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Grow the slot's table so write position ``pos`` has a page
+        (an MMU page fault when growth happens). Returns True if grown."""
+        table = self.tables[slot]
+        blk = pos // self.page_size
+        grew = False
+        while table.n_pages <= blk:
+            self.pool.grow_pages(table.handle, self.owners[slot])
+            self._bt[slot, table.n_pages - 1] = table.pages[-1]
+            grew = True
+        return grew
+
+    def release(self, slot: int):
+        """EOS recycling: return the slot's pages to the pool."""
+        table = self.tables[slot]
+        if table is None:
+            return
+        self.pool.free_pages(table.handle, self.owners[slot])
+        self.pool.clear_quota(self.owners[slot])
+        self.tables[slot] = None
+        self.owners[slot] = None
+        self._bt[slot, :] = 0
+
+    # ------------------------------------------------------------------
+    # Device state
+    # ------------------------------------------------------------------
+    def write_prefill(self, caches, slot: int, length: int):
+        """Scatter a batch=1 prefill cache into the slot's leased pages."""
+        block_row = jax.numpy.asarray(self._bt[slot])
+        self.state = self._write(self.state, caches,
+                                 slot=jax.numpy.int32(slot),
+                                 block_row=block_row, length=length,
+                                 page_size=self.page_size)
+
+    def block_tables(self) -> np.ndarray:
+        """(B, blocks_per_slot) int32 — padded entries are 0 (any
+        in-range page; reads of them are masked by per-slot lengths)."""
+        return self._bt.copy()
+
+    # ------------------------------------------------------------------
+    # Isolation / introspection
+    # ------------------------------------------------------------------
+    def translate(self, slot: int, logical: int, owner: str) -> int:
+        """Ownership-checked logical block → physical byte address; a
+        cross-slot access raises IsolationViolation via the MMU."""
+        return self.pool.translate_page(self.tables[slot].handle, owner,
+                                        logical)
+
+    def live_pages(self) -> dict:
+        """slot → list of physical pages (property-test surface)."""
+        return {i: list(t.pages) for i, t in enumerate(self.tables)
+                if t is not None}
+
+    def no_double_mapping(self) -> bool:
+        pages = [p for t in self.tables if t is not None for p in t.pages]
+        return len(pages) == len(set(pages))
+
+    def tables_in_bounds(self) -> bool:
+        return all(0 <= p < self.pool.n_segments
+                   for t in self.tables if t is not None
+                   for p in t.pages)
+
+    def memory_stats(self) -> dict:
+        return self.pool.memory_stats()
