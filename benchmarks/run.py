@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV (harness contract). Modules:
   arch_step         reduced-config per-arch step timing (regression guard)
   scheduler_fairness  data-plane scheduler — tenant throughput shares
                     under skewed offered load (WFQ vs broker vs hybrid)
+  slo_attainment    SLO control plane — per-class deadline attainment
+                    under ≥2× overload (EDF "slo" vs wfq vs broker)
 """
 from __future__ import annotations
 
@@ -23,11 +25,12 @@ def main() -> None:
     os.chdir(os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import (arch_step, criteria_report, fig6a_apps,
                             fig6b_breakdown, micro, roofline,
-                            scheduler_fairness)
+                            scheduler_fairness, slo_attainment)
     modules = [("fig6a", fig6a_apps), ("fig6b", fig6b_breakdown),
                ("micro", micro), ("criteria", criteria_report),
                ("roofline", roofline), ("arch_step", arch_step),
-               ("sched_fair", scheduler_fairness)]
+               ("sched_fair", scheduler_fairness),
+               ("slo_attain", slo_attainment)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:

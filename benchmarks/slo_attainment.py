@@ -1,0 +1,270 @@
+"""Per-class deadline attainment under skewed overload → BENCH_slo.json.
+
+The scenario the SLO control plane exists for: a latency-sensitive
+tenant ("gold") submits periodic bursts with a deadline budget while
+low-priority flooders offer ≥2× the plane's service capacity. Weights
+express *shares*, not *latency*: WFQ still interleaves flooder ops
+between gold's backlogged burst proportionally, so the tail of each
+burst blows the budget — EDF ("slo" policy) serves the deadline-urgent
+class first and drains the burst back-to-back.
+
+Measured per policy (``slo`` vs ``wfq`` vs ``fev`` round-robin broker):
+
+* gold / silver deadline attainment (fraction of ops finishing within
+  their budget) and latency p50/p95,
+* served vs offered op rate (the overload factor),
+* for ``slo``: the plane's own attainment accounting from ``stats()``.
+
+Budgets are **calibrated** to the machine: the per-op service cost is
+measured first and the gold budget set to 1.5× the burst's back-to-back
+drain time, so the pass/fail contrast is capacity-independent.
+
+    PYTHONPATH=src python benchmarks/slo_attainment.py [--quick]
+
+Fails loudly (exit 1) if gold under ``slo`` misses its budget or fails
+to beat ``wfq`` — the regression guard ``make bench-slo`` wires into
+``make smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+OP_S = 0.002                 # nominal op service time (sleep)
+BURST = 12                   # gold ops per burst
+N_FLOODERS = 4               # low-priority tenants sharing the overload
+OVERLOAD = 2.0               # flooder offered rate vs measured capacity
+MAX_OUTSTANDING = 2000       # per flooder, bounds queue memory
+
+
+def _mk_tenant(name):
+    from repro.core.shell import CompletionQueue
+    from repro.core.tenant import Tenant
+    return Tenant(name=name, vslice=None, pool=None, cq=CompletionQueue())
+
+
+def _op():
+    time.sleep(OP_S)
+
+
+def calibrate() -> float:
+    """Per-op service cost through a queued plane (burst drain / size)."""
+    from repro.core.interposition import OpLog
+    from repro.core.scheduler import make_data_plane
+    plane = make_data_plane("slo", oplog=OpLog())
+    t = _mk_tenant("cal")
+    plane.register(t)
+    try:
+        for _ in range(4):                              # warm up
+            plane.execute(t, "run", _op, {})
+        t0 = time.monotonic()
+        futs = [plane.submit(t, "run", _op, {}) for _ in range(16)]
+        for f in futs:
+            f.result(timeout=30)
+        return (time.monotonic() - t0) / 16
+    finally:
+        plane.shutdown()
+
+
+def _flooder(plane, tenant, rate, stop):
+    """Paced open-loop submitter: ``rate`` ops/s regardless of service."""
+    outstanding = [0]
+    lock = threading.Lock()
+
+    def done(_):
+        with lock:
+            outstanding[0] -= 1
+
+    period = 1.0 / rate
+    nxt = time.monotonic()
+    while not stop.is_set():
+        now = time.monotonic()
+        if now < nxt:
+            stop.wait(min(period, nxt - now))
+            continue
+        nxt = max(nxt + period, now - 1.0)     # no unbounded catch-up
+        with lock:
+            full = outstanding[0] >= MAX_OUTSTANDING
+            if not full:
+                outstanding[0] += 1
+        if not full:
+            plane.submit(tenant, "run", _op, {}).add_done_callback(done)
+
+
+def _gold(plane, tenant, period_s, stop, lat):
+    """Closed-loop bursts: submit BURST ops, wait for all, record each
+    op's latency from the burst submit instant (the deadline clock)."""
+    while not stop.is_set():
+        t0 = time.monotonic()
+        futs = [plane.submit(tenant, "run", _op, {}) for _ in range(BURST)]
+        for f in futs:
+            try:
+                f.result(timeout=60)
+                lat.append(time.monotonic() - t0)
+            except Exception:                  # noqa: BLE001
+                lat.append(float("inf"))
+        rem = period_s - (time.monotonic() - t0)
+        if rem > 0:
+            stop.wait(rem)
+
+
+def _silver(plane, tenant, rate, stop, lat):
+    """Paced singles with per-op latency via completion callbacks."""
+    period = 1.0 / rate
+    while not stop.is_set():
+        t0 = time.monotonic()
+        plane.submit(tenant, "run", _op, {}).add_done_callback(
+            lambda _, s=t0: lat.append(time.monotonic() - s))
+        stop.wait(period)
+
+
+def _attainment(lat, budget):
+    if not lat:
+        return 0.0
+    return sum(1 for x in lat if x <= budget) / len(lat)
+
+
+def _pct(lat, q):
+    if not lat:
+        return 0.0
+    xs = sorted(lat)
+    return xs[min(len(xs) - 1, int(q * (len(xs) - 1)))]
+
+def measure(policy: str, seconds: float, op_cost: float,
+            gold_budget: float, silver_budget: float) -> dict:
+    from repro.core.interposition import OpLog
+    from repro.core.scheduler import (PRIORITY_HIGH, PRIORITY_LOW,
+                                      make_data_plane)
+
+    plane = make_data_plane(policy, oplog=OpLog())
+    gold, silver = _mk_tenant("gold"), _mk_tenant("silver")
+    floods = [_mk_tenant(f"flood{i}") for i in range(N_FLOODERS)]
+    if policy == "slo":
+        # deadline classes: budgets ARE the scheduling signal
+        plane.register(gold, priority=PRIORITY_HIGH, slo_wait_s=gold_budget)
+        plane.register(silver, slo_wait_s=silver_budget)
+        for f in floods:
+            plane.register(f, priority=PRIORITY_LOW, slo_wait_s=10.0)
+    else:
+        # share-based QoS: generous weights for the latency classes
+        plane.register(gold, weight=4.0)
+        plane.register(silver, weight=2.0)
+        for f in floods:
+            plane.register(f, weight=1.0)
+
+    capacity = 1.0 / op_cost
+    flood_rate = capacity * OVERLOAD / len(floods)
+    gold_period = 4.0 * BURST * op_cost
+    stop = threading.Event()
+    gold_lat, silver_lat = [], []
+    threads = [threading.Thread(target=_flooder,
+                                args=(plane, f, flood_rate, stop),
+                                daemon=True) for f in floods]
+    threads.append(threading.Thread(
+        target=_gold, args=(plane, gold, gold_period, stop, gold_lat),
+        daemon=True))
+    threads.append(threading.Thread(
+        target=_silver, args=(plane, silver, 0.15 * capacity, stop,
+                              silver_lat), daemon=True))
+    for th in threads:
+        th.start()
+    time.sleep(seconds)
+    stop.set()
+    for th in threads:
+        th.join(timeout=90)
+    st = plane.stats()["tenants"]
+    out = {
+        "gold_attainment": _attainment(gold_lat, gold_budget),
+        "gold_p50_ms": 1e3 * _pct(gold_lat, 0.50),
+        "gold_p95_ms": 1e3 * _pct(gold_lat, 0.95),
+        "gold_samples": len(gold_lat),
+        "silver_attainment": _attainment(silver_lat, silver_budget),
+        "silver_p95_ms": 1e3 * _pct(silver_lat, 0.95),
+        "offered_ops_s": sum(s["submitted"] for s in st.values()) / seconds,
+        "served_ops_s": sum(s["completed"] for s in st.values()) / seconds,
+    }
+    out["overload_factor"] = (out["offered_ops_s"]
+                              / max(out["served_ops_s"], 1e-9))
+    if policy == "slo":
+        out["plane_reported"] = {
+            n: {"slo_attainment": s["slo_attainment"],
+                "p95_wait_ms": s["p95_wait_ms"]}
+            for n, s in st.items()}
+    plane.shutdown()
+    return out
+
+
+def run(seconds: float = 1.5):
+    """benchmarks/run.py harness rows: (name, us_per_call, derived)."""
+    op_cost = calibrate()
+    gold_budget = 1.5 * BURST * op_cost
+    rows = []
+    for policy in ("slo", "wfq", "fev"):
+        r = measure(policy, seconds, op_cost, gold_budget,
+                    3.0 * BURST * op_cost)
+        us = 1e6 / max(r["served_ops_s"], 1e-9)
+        rows.append((f"slo_attain.{policy}", us,
+                     f"gold={r['gold_attainment']:.2f} "
+                     f"p95={r['gold_p95_ms']:.1f}ms "
+                     f"overload={r['overload_factor']:.1f}x"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seconds", type=float, default=None)
+    ap.add_argument("--out", default="BENCH_slo.json")
+    args = ap.parse_args()
+    seconds = args.seconds or (1.5 if args.quick else 5.0)
+
+    op_cost = calibrate()
+    gold_budget = 1.5 * BURST * op_cost
+    silver_budget = 3.0 * BURST * op_cost
+    print(f"[slo] calibrated op cost {1e3 * op_cost:.2f} ms "
+          f"(capacity ≈ {1.0 / op_cost:.0f} ops/s); gold budget "
+          f"{1e3 * gold_budget:.1f} ms for bursts of {BURST}, offered "
+          f"overload ×{OVERLOAD:.1f}")
+
+    results = {"config": {"op_cost_ms": 1e3 * op_cost, "burst": BURST,
+                          "gold_budget_ms": 1e3 * gold_budget,
+                          "silver_budget_ms": 1e3 * silver_budget,
+                          "overload": OVERLOAD, "seconds": seconds}}
+    print(f"{'policy':<8}{'gold att.':>10}{'gold p95':>10}"
+          f"{'silver att.':>12}{'overload':>10}{'served/s':>10}")
+    for policy in ("slo", "wfq", "fev"):
+        r = measure(policy, seconds, op_cost, gold_budget, silver_budget)
+        results[policy] = r
+        print(f"{policy:<8}{r['gold_attainment']:>10.3f}"
+              f"{r['gold_p95_ms']:>9.1f}m"
+              f"{r['silver_attainment']:>12.3f}"
+              f"{r['overload_factor']:>9.1f}x"
+              f"{r['served_ops_s']:>10.0f}")
+
+    slo_g = results["slo"]["gold_attainment"]
+    wfq_g = results["wfq"]["gold_attainment"]
+    checks = {
+        "slo_gold_meets_budget": slo_g >= 0.9,
+        "slo_beats_wfq": slo_g > wfq_g,
+        "overload_sustained": results["slo"]["overload_factor"] >= 1.5,
+    }
+    results["checks"] = checks
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    ok = all(checks.values())
+    print(f"[slo] gold attainment: slo={slo_g:.3f} wfq={wfq_g:.3f} "
+          f"fev={results['fev']['gold_attainment']:.3f} → "
+          f"{'PASS' if ok else 'FAIL'} ({args.out})")
+    if not ok:
+        print(f"[slo] failed checks: "
+              f"{[k for k, v in checks.items() if not v]}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

@@ -9,24 +9,39 @@ Includes the paper's cross-PRR reprogram attack (denied + audited), a
 warm-reconfiguration cache hit, and the per-tenant scheduler stats.
 
 Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+      ... --policy slo   # deadline-scheduled data plane: alice serves
+      # a latency-sensitive class (PRIORITY_HIGH, 50 ms wait budget),
+      # bob batch traffic — stats report per-tenant SLO attainment
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
+import argparse                                   # noqa: E402
 import tempfile                                   # noqa: E402
 import numpy as np                                # noqa: E402
 import jax                                        # noqa: E402
 import jax.numpy as jnp                           # noqa: E402
 
-from repro.core import VMM, LegalityError, ProgramRequest, report  # noqa: E402
+from repro.core import (VMM, LegalityError, PRIORITY_HIGH,  # noqa: E402
+                        ProgramRequest, report)
 from repro.launch.mesh import make_local_mesh     # noqa: E402
 
-mesh = make_local_mesh((2, 4))
-vmm = VMM(mesh, policy="wfq", ckpt_root=tempfile.mkdtemp())
+ap = argparse.ArgumentParser()
+ap.add_argument("--policy", default="wfq", choices=["wfq", "slo"])
+cli = ap.parse_args()
 
-alice = vmm.create_vm("alice", (1, 4), sched_weight=3.0)
-bob = vmm.create_vm("bob", (1, 4), sched_weight=1.0)
+mesh = make_local_mesh((2, 4))
+vmm = VMM(mesh, policy=cli.policy, ckpt_root=tempfile.mkdtemp())
+
+if cli.policy == "slo":
+    # deadline classes instead of weights: alice is latency-sensitive
+    alice = vmm.create_vm("alice", (1, 4), sched_priority=PRIORITY_HIGH,
+                          sched_slo_wait_s=0.05)
+    bob = vmm.create_vm("bob", (1, 4))
+else:
+    alice = vmm.create_vm("alice", (1, 4), sched_weight=3.0)
+    bob = vmm.create_vm("bob", (1, 4), sched_weight=1.0)
 print("floorplan:", vmm.floorplanner.snapshot())
 
 for tenant, arch in ((alice, "qwen1.5-0.5b"), (bob, "internlm2-1.8b")):
@@ -61,8 +76,13 @@ print(f"compile cache: hits={vmm.compiler.hits} "
       f"misses={vmm.compiler.misses}")
 sched = vmm.stats()["scheduler"]
 for name, s in sched["tenants"].items():
-    print(f"[sched:{sched['policy']}] {name}: weight={s['weight']} "
-          f"completed={s['completed']} avg_wait={s['avg_wait_ms']:.2f}ms "
-          f"avg_service={s['avg_service_ms']:.2f}ms")
+    line = (f"[sched:{sched['policy']}] {name}: weight={s['weight']} "
+            f"completed={s['completed']} avg_wait={s['avg_wait_ms']:.2f}ms "
+            f"avg_service={s['avg_service_ms']:.2f}ms")
+    if "slo_attainment" in s:
+        line += (f" slo_budget={s['slo_wait_ms']:.0f}ms "
+                 f"attainment={s['slo_attainment']:.0%} "
+                 f"p95_wait={s['p95_wait_ms']:.2f}ms")
+    print(line)
 print(report(vmm).to_markdown())
 vmm.shutdown()

@@ -18,21 +18,22 @@ from repro.core.mmu import (HBM_PER_CHIP, SEGMENT_BYTES, IsolationViolation,
 from repro.core.reconfig import (Bitfile, CompileService, LegalityError,
                                  ProgramLoader, ProgramRequest)
 from repro.core.scheduler import (PRIORITY_HIGH, PRIORITY_LOW,
-                                  PRIORITY_NORMAL, BrokerPlane, DataPlane,
-                                  PassthroughPlane, WFQPlane,
-                                  make_data_plane)
+                                  PRIORITY_NORMAL, AdmissionPressure,
+                                  BrokerPlane, DataPlane, PassthroughPlane,
+                                  SLOPlane, WFQPlane, make_data_plane)
 from repro.core.shell import CompletionQueue, TransferEngine
 from repro.core.tenant import GuestDevice, Tenant
 from repro.core.vmm import VMM, AdmissionError
+from repro.core.autoscaler import Autoscaler  # noqa: E402 — needs VMM first
 from repro.core.vslice import Floorplanner, SliceSpec, VSlice
 
 __all__ = [
-    "VMM", "AdmissionError", "Bitfile", "BrokerPlane", "CompileService",
-    "CompletionQueue", "CriteriaReport", "DataPlane", "Floorplanner",
-    "GuestDevice", "HBM_PER_CHIP", "IsolationViolation", "LegalityError",
-    "MMUError", "OutOfMemory", "PRIORITY_HIGH", "PRIORITY_LOW",
-    "PRIORITY_NORMAL", "PassthroughPlane", "ProgramLoader",
-    "ProgramRequest", "QuotaExceeded", "SEGMENT_BYTES", "SegmentPool",
-    "SliceSpec", "Tenant", "TransferEngine", "VSlice", "WFQPlane",
-    "make_data_plane", "report",
+    "VMM", "AdmissionError", "AdmissionPressure", "Autoscaler", "Bitfile",
+    "BrokerPlane", "CompileService", "CompletionQueue", "CriteriaReport",
+    "DataPlane", "Floorplanner", "GuestDevice", "HBM_PER_CHIP",
+    "IsolationViolation", "LegalityError", "MMUError", "OutOfMemory",
+    "PRIORITY_HIGH", "PRIORITY_LOW", "PRIORITY_NORMAL", "PassthroughPlane",
+    "ProgramLoader", "ProgramRequest", "QuotaExceeded", "SEGMENT_BYTES",
+    "SLOPlane", "SegmentPool", "SliceSpec", "Tenant", "TransferEngine",
+    "VSlice", "WFQPlane", "make_data_plane", "report",
 ]

@@ -326,7 +326,9 @@ class SegmentPool:
                 raise QuotaExceeded(f"{owner}: {n_segs} segs over quota {q}")
             start = self.alloc_backend.alloc(n_segs)
             if start is None:
-                self.stats.denied += 1
+                # _deny, not a bare stats bump: OOM must show up in the
+                # per-owner denial counts the SLO admission gate reads
+                self._deny(owner)
                 raise OutOfMemory(
                     f"{owner}: {n_segs} segs; "
                     f"{self.alloc_backend.free_segments()} free")
@@ -400,7 +402,7 @@ class SegmentPool:
             if start is None:
                 for p in pages:                      # roll back partial
                     self.alloc_backend.free(p, 1)
-                self.stats.denied += 1
+                self._deny(owner)
                 raise OutOfMemory(
                     f"{owner}: {n} pages; "
                     f"{self.alloc_backend.free_segments()} free")

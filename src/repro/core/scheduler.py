@@ -19,6 +19,17 @@ operator (``read``/``write``/``run``) to:
   buckets cap offered op rate. This is the scheduler the multi-tenant
   QoS roadmap items build on (cf. Mbongue et al.'s shared-FPGA
   scheduling gap and SYNERGY's runtime-managed scheduling).
+* ``SLOPlane`` — deadline scheduling: earliest-deadline-first within
+  priority classes, where a job's deadline is its submit time plus the
+  tenant's SLO wait budget (``slo_wait_s``, a p95 wait target). Weights
+  express *shares*; deadlines express *latency* — under overload WFQ
+  still interleaves backlogged tenants proportionally, while EDF serves
+  the deadline-urgent op first. The plane also runs an **admission
+  gate** on the MMU paging view (``SegmentPool.memory_stats()``): a
+  tenant whose pool is under sustained memory pressure (high occupancy,
+  fresh per-owner quota denials) has new submissions queued behind
+  other classes or denied outright (``AdmissionPressure``) — the
+  memory signal, not just op-rate token buckets, throttles admission.
 
 All planes share one service path (:meth:`DataPlane._run_job`): op-log
 begin/end, the tenant quiesce protocol (``enter_op``/``exit_op``),
@@ -47,6 +58,8 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
+from repro.core.mmu import MMUError
+
 # IRQ sources (shared with the VMM; re-exported from repro.core.vmm for
 # backward compatibility).
 IRQ_DONE = 0
@@ -57,6 +70,16 @@ IRQ_DEGRADED = 2
 PRIORITY_HIGH = 0
 PRIORITY_NORMAL = 1
 PRIORITY_LOW = 2
+
+
+class AdmissionPressure(MMUError):
+    """Submission rejected by the SLO admission gate: the tenant's MMU
+    pool is under memory pressure (occupancy past the deny watermark or
+    fresh quota denials while pressured). Back off and resubmit.
+
+    Subclasses ``MMUError``: the denial is a memory signal, so callers
+    that already handle MMU exhaustion (e.g. the serve engine) degrade
+    the same way instead of crashing on an unknown exception type."""
 
 
 @dataclass
@@ -115,6 +138,18 @@ class _TenantEntry:
     t_tokens: float = 0.0                 # last bucket refill
     buildup_since: Optional[float] = None  # queue above watermark since
     last_buildup_irq: float = 0.0
+    # SLO plane bookkeeping (unused by other planes)
+    slo_wait_s: Optional[float] = None    # per-op wait budget (p95 target)
+    waits: deque = field(default_factory=lambda: deque(maxlen=512))
+    slo_hits: int = 0
+    slo_misses: int = 0
+    admission_denied: int = 0
+    mem_pressure: float = 0.0             # cached MMU-pool pressure [0,1]
+    has_leases: bool = False              # live page tables → demote only
+    mem_denials_seen: int = 0             # quota denials at last refresh
+    pressure_checked: float = 0.0
+    demoted: bool = False                 # soft pressure: queue behind class
+    deny_until: float = 0.0               # hard pressure: reject submissions
 
 
 class DataPlane:
@@ -140,7 +175,8 @@ class DataPlane:
     # -- tenant lifecycle ----------------------------------------------
     def register(self, tenant, weight: float = 1.0,
                  priority: int = PRIORITY_NORMAL,
-                 rate_limit_ops: float = 0.0):
+                 rate_limit_ops: float = 0.0,
+                 slo_wait_s: Optional[float] = None):
         with self._lock:
             e = _TenantEntry(tenant=tenant,
                              stats=TenantSchedStats(weight=weight,
@@ -148,7 +184,8 @@ class DataPlane:
                              weight=max(weight, 1e-6), priority=priority,
                              rate_limit=rate_limit_ops,
                              tokens=max(1.0, rate_limit_ops),
-                             t_tokens=time.monotonic())
+                             t_tokens=time.monotonic(),
+                             slo_wait_s=slo_wait_s)
             self._entries[tenant.name] = e
         return e
 
@@ -210,11 +247,19 @@ class DataPlane:
                         e.stats.completed += 1
                     else:
                         e.stats.failed += 1
+                    # plane-specific accounting hook — runs under the
+                    # lock and BEFORE the future resolves, so a caller
+                    # woken by the result sees stats that include it
+                    self._account_locked(e, job, dt, ok)
         if ok:
             job.future.set_result(val)
         else:
             job.future.set_exception(val)
         return dt
+
+    def _account_locked(self, e: "_TenantEntry", job: "_Job", dt: float,
+                        ok: bool):
+        """Per-plane stats hook; called with self._lock held."""
 
     # -- straggler detection (EWMA deadline per (tenant, op)) ----------
     def _observe(self, t, op: str, dt: float):
@@ -318,8 +363,46 @@ class _QueuedPlane(DataPlane):
 
     def _pick(self):
         """Return (job, entry, retry_delay); job is peeked, not popped.
+        Called with the lock held. Default: rate-limited min-key scan
+        over backlogged tenants, ranking via the per-plane ``_rank``
+        hook (WFQ virtual time, SLO deadline); the broker overrides the
+        whole pick with its rotation instead."""
+        now = time.monotonic()
+        best, best_delay = None, None
+        for e in self._entries.values():
+            if not e.q:
+                continue
+            ready, delay = self._refill(e, now)
+            if not ready:
+                best_delay = delay if best_delay is None \
+                    else min(best_delay, delay)
+                continue
+            key = self._rank(e, now)
+            if best is None or key < best[0]:
+                best = (key, e)
+        if best is None:
+            return None, None, best_delay
+        e = best[1]
+        if e.rate_limit > 0.0:
+            e.tokens -= 1.0
+        return e.q[0], e, None
+
+    def _rank(self, e: _TenantEntry, now: float) -> tuple:
+        """Scheduling key for ``_pick`` (smaller = served first).
         Called with the lock held."""
         raise NotImplementedError
+
+    def _refill(self, e: _TenantEntry, now: float):
+        """Token-bucket refill for per-tenant op-rate limits. Returns
+        (ready, retry_delay). Called with the lock held."""
+        if e.rate_limit <= 0.0:
+            return True, None
+        burst = max(1.0, e.rate_limit)            # ≥1 so sub-1Hz rates fire
+        e.tokens = min(burst, e.tokens + (now - e.t_tokens) * e.rate_limit)
+        e.t_tokens = now
+        if e.tokens >= 1.0:
+            return True, None
+        return False, (1.0 - e.tokens) / e.rate_limit
 
     def _charge(self, entry: _TenantEntry, service_s: float):
         pass
@@ -387,37 +470,8 @@ class WFQPlane(_QueuedPlane):
         self._vclock = 0.0
         super().__init__(**kw)
 
-    def _refill(self, e: _TenantEntry, now: float):
-        if e.rate_limit <= 0.0:
-            return True, None
-        burst = max(1.0, e.rate_limit)            # ≥1 so sub-1Hz rates fire
-        e.tokens = min(burst, e.tokens + (now - e.t_tokens) * e.rate_limit)
-        e.t_tokens = now
-        if e.tokens >= 1.0:
-            return True, None
-        return False, (1.0 - e.tokens) / e.rate_limit
-
-    def _pick(self):
-        now = time.monotonic()
-        best, best_delay = None, None
-        for e in self._entries.values():
-            if not e.q:
-                continue
-            ready, delay = self._refill(e, now)
-            if not ready:
-                best_delay = delay if best_delay is None \
-                    else min(best_delay, delay)
-                continue
-            vt = max(e.vtime, self._vclock)
-            key = (e.priority, vt, e.q[0].seq)
-            if best is None or key < best[0]:
-                best = (key, e)
-        if best is None:
-            return None, None, best_delay
-        e = best[1]
-        if e.rate_limit > 0.0:
-            e.tokens -= 1.0
-        return e.q[0], e, None
+    def _rank(self, e: _TenantEntry, now: float) -> tuple:
+        return (e.priority, max(e.vtime, self._vclock), e.q[0].seq)
 
     def _charge(self, entry: _TenantEntry, service_s: float):
         with self._lock:
@@ -428,12 +482,157 @@ class WFQPlane(_QueuedPlane):
             entry.stats.credit = entry.vtime
 
 
+class SLOPlane(_QueuedPlane):
+    """Deadline scheduling + MMU-pressure admission (the SLO control
+    plane's data-plane half).
+
+    **EDF within priority classes.** Each queued op carries a deadline:
+    its submit time plus the tenant's ``slo_wait_s`` budget (explicit at
+    ``register``, else the class default). The scheduler serves, within
+    the most urgent non-empty priority class, the op with the earliest
+    deadline. Per-tenant attainment (hits/misses against the budget, a
+    rolling p95 of observed waits) is reported through ``stats()``.
+
+    **Admission gate on the MMU paging view.** Before queueing, the
+    plane reads the tenant's ``SegmentPool.memory_stats()`` (cached for
+    ``pressure_refresh_s``): occupancy plus a fragmentation term forms a
+    pressure score in [0, 1]. Above ``pressure_queue_util`` the tenant
+    is *demoted* one priority class (queued behind unpressured tenants);
+    above ``pressure_deny_util`` — or when fresh per-owner quota
+    denials arrive while already pressured — new submissions are
+    *denied* with :class:`AdmissionPressure` for ``deny_hold_s``. The
+    memory-starved tenant is throttled by the MMU signal itself, not
+    only by op-rate token buckets (which this plane also enforces).
+
+    Liveness carve-out: a tenant holding live *page-table leases* is
+    never hard-denied, only demoted. Its in-flight ops (paged-KV decode
+    steps) are the only path to EOS reclaim — denying them would
+    self-sustain the very pressure the gate reads. Newcomer admission
+    on that path is throttled separately by the serve engine's
+    ``pool_pressure_gate``.
+    """
+
+    name = "slo"
+
+    # Per-class default wait budgets when register() gives none.
+    DEFAULT_SLO_S = {PRIORITY_HIGH: 0.05, PRIORITY_NORMAL: 0.25,
+                     PRIORITY_LOW: 1.0}
+
+    def __init__(self, default_slo_s: Optional[dict] = None,
+                 pressure_queue_util: float = 0.85,
+                 pressure_deny_util: float = 0.97,
+                 pressure_refresh_s: float = 0.05,
+                 deny_hold_s: float = 0.25, **kw):
+        self.default_slo_s = dict(self.DEFAULT_SLO_S)
+        if default_slo_s:
+            self.default_slo_s.update(default_slo_s)
+        self.pressure_queue_util = pressure_queue_util
+        self.pressure_deny_util = pressure_deny_util
+        self.pressure_refresh_s = pressure_refresh_s
+        self.deny_hold_s = deny_hold_s
+        super().__init__(**kw)
+
+    def _slo_s(self, e: _TenantEntry) -> float:
+        if e.slo_wait_s is not None:
+            return e.slo_wait_s
+        return self.default_slo_s.get(e.priority, 0.25)
+
+    # -- MMU-pressure admission gate -----------------------------------
+    def _refresh_pressure(self, e: _TenantEntry, now: float):
+        """Recompute cached pool pressure. Lock held by caller; the pool
+        lock nests inside the plane lock (never the reverse)."""
+        if now - e.pressure_checked < self.pressure_refresh_s:
+            return
+        e.pressure_checked = now
+        pool = getattr(e.tenant, "pool", None)
+        if pool is None:
+            e.mem_pressure, e.demoted = 0.0, False
+            return
+        ms = pool.memory_stats()
+        util = ms["segments_in_use"] / max(ms["segments_total"], 1)
+        frag = ms.get("fragmentation", 0.0)
+        denials = sum(ms.get("quota_denials", {}).values())
+        fresh = denials - e.mem_denials_seen
+        e.mem_denials_seen = denials
+        # fragmentation makes nominally-free segments unusable for
+        # contiguous asks — fold a fraction into the occupancy signal
+        e.mem_pressure = min(1.0, util + 0.25 * frag * (1.0 - util))
+        e.demoted = e.mem_pressure >= self.pressure_queue_util
+        # liveness: a tenant with live page-table leases is only ever
+        # demoted — its in-flight ops are the path to EOS reclaim
+        e.has_leases = ms.get("page_tables", 0) > 0
+        # fresh denials while already pressured latch a deny window;
+        # occupancy past the deny watermark is checked instantaneously
+        # at submit (it clears the moment the pool drains)
+        if fresh > 0 and e.demoted and not e.has_leases:
+            e.deny_until = now + self.deny_hold_s
+
+    def submit(self, tenant, op, work, detail=None) -> Future:
+        e = self._entries.get(tenant.name)
+        if e is not None:
+            now = time.monotonic()
+            with self._lock:
+                self._refresh_pressure(e, now)
+                denied = (now < e.deny_until
+                          or (e.mem_pressure >= self.pressure_deny_util
+                              and not e.has_leases))
+                if denied:
+                    e.admission_denied += 1
+            if denied:
+                fut = Future()
+                fut.set_exception(AdmissionPressure(
+                    f"{tenant.name}: memory pressure "
+                    f"{e.mem_pressure:.2f} — admission denied"))
+                return fut
+        return super().submit(tenant, op, work, detail)
+
+    # -- EDF rank: deadline within (possibly demoted) priority class ---
+    def _rank(self, e: _TenantEntry, now: float) -> tuple:
+        self._refresh_pressure(e, now)
+        prio = e.priority + (1 if e.demoted else 0)
+        return (prio, e.q[0].t_submit + self._slo_s(e), e.q[0].seq)
+
+    # -- attainment accounting (locked hook: runs before the job's
+    # future resolves, so stats() is never behind a woken caller) ------
+    def _account_locked(self, e: _TenantEntry, job: _Job, dt: float,
+                        ok: bool):
+        wait = max(0.0, time.monotonic() - job.t_submit - dt)
+        e.waits.append(wait)
+        # a failed op never served its caller — always an SLO miss,
+        # even when it failed fast within the wait budget
+        if ok and wait <= self._slo_s(e):
+            e.slo_hits += 1
+        else:
+            e.slo_misses += 1
+
+    def stats(self) -> dict:
+        s = super().stats()
+        with self._lock:
+            for n, e in self._entries.items():
+                snap = s["tenants"].get(n)
+                if snap is None:          # registered since the base
+                    continue              # snapshot — skip, don't crash
+                waits = sorted(e.waits)
+                p95 = waits[int(0.95 * (len(waits) - 1))] if waits else 0.0
+                done = max(e.slo_hits + e.slo_misses, 1)
+                snap.update({
+                    "slo_wait_ms": 1e3 * self._slo_s(e),
+                    "slo_hits": e.slo_hits,
+                    "slo_misses": e.slo_misses,
+                    "slo_attainment": e.slo_hits / done,
+                    "p95_wait_ms": 1e3 * p95,
+                    "mem_pressure": e.mem_pressure,
+                    "admission_denied": e.admission_denied,
+                })
+        return s
+
+
 # ---------------------------------------------------------------------------
 # Policy string → plane factory (the VMM's single point of selection)
 # ---------------------------------------------------------------------------
 
 def make_data_plane(policy: str, oplog=None, **kw) -> DataPlane:
-    """``fev``/``bev``/``hybrid``/``wfq`` → configured DataPlane."""
+    """``fev``/``bev``/``hybrid``/``wfq``/``slo`` → configured DataPlane."""
     if policy == "fev":
         return BrokerPlane(oplog=oplog, log_ops=True, **kw)
     if policy == "bev":
@@ -442,7 +641,9 @@ def make_data_plane(policy: str, oplog=None, **kw) -> DataPlane:
         return PassthroughPlane(oplog=oplog, log_ops=True, **kw)
     if policy == "wfq":
         return WFQPlane(oplog=oplog, log_ops=True, **kw)
+    if policy == "slo":
+        return SLOPlane(oplog=oplog, log_ops=True, **kw)
     raise ValueError(f"unknown data-plane policy: {policy!r}")
 
 
-POLICIES = ("fev", "bev", "hybrid", "wfq")
+POLICIES = ("fev", "bev", "hybrid", "wfq", "slo")

@@ -16,6 +16,10 @@ lives in :mod:`repro.core.scheduler`):
 * ``wfq``    — weighted fair queueing (``WFQPlane``): FEV-style
   mediation with per-tenant weights, priority classes, and op-rate
   limits for multi-tenant QoS.
+* ``slo``    — deadline scheduling (``SLOPlane``): earliest-deadline-
+  first within priority classes against per-tenant wait budgets, with
+  an admission gate driven by the MMU paging view (memory-starved
+  tenants are queued behind their class or denied).
 
 Also implemented here: admission (floorplanner + MMU pool + completion
 queue per tenant), the freeze/quiesce protocol around reconfiguration,
@@ -76,6 +80,8 @@ class VMM:
         self.plane = make_data_plane(policy, oplog=self.oplog,
                                      straggler_factor=straggler_factor,
                                      **(scheduler_opts or {}))
+        # Set by repro.core.autoscaler.Autoscaler when one attaches.
+        self.autoscaler = None
 
     # Straggler EWMA state lives in the plane; keep the historical
     # ``vmm.straggler_factor`` knob working (tests tune it post-init).
@@ -94,7 +100,8 @@ class VMM:
                   hbm_quota_bytes: Optional[int] = None,
                   sched_weight: float = 1.0,
                   sched_priority: Optional[int] = None,
-                  sched_rate_limit_ops: float = 0.0) -> Tenant:
+                  sched_rate_limit_ops: float = 0.0,
+                  sched_slo_wait_s: Optional[float] = None) -> Tenant:
         rec = self.oplog.begin(name, "admit", {"shape": slice_shape})
         vs = self.floorplanner.allocate(slice_shape)
         if vs is None:
@@ -115,6 +122,8 @@ class VMM:
                     "rate_limit_ops": sched_rate_limit_ops}
         if sched_priority is not None:
             sched_kw["priority"] = sched_priority
+        if sched_slo_wait_s is not None:
+            sched_kw["slo_wait_s"] = sched_slo_wait_s
         with self._lock:
             self.tenants[name] = t
         self.plane.register(t, **sched_kw)
@@ -370,4 +379,8 @@ class VMM:
             "transfer": self.transfer.stats.__dict__,
             "oplog_records": len(self.oplog.records),
             "scheduler": self.plane.stats(),
+            # elastic-resize action log (None until an Autoscaler attaches)
+            "autoscaler": (self.autoscaler.stats()
+                           if getattr(self, "autoscaler", None) is not None
+                           else None),
         }

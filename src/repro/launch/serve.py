@@ -4,6 +4,8 @@
         --requests 8 --max-new 16
     ... --virtualized   # route steps through the VMM data plane
     ... --virtualized --policy wfq   # weighted-fair-queued data plane
+    ... --virtualized --policy slo --slo-ms 50   # deadline-scheduled
+                      # data plane + MMU-pressure admission gate
 
 Requests are submitted with varying prompt lengths and token budgets;
 the engine admits them into batch slots as earlier requests hit EOS —
@@ -34,7 +36,9 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--virtualized", action="store_true")
     ap.add_argument("--policy", default="hybrid",
-                    choices=["fev", "bev", "hybrid", "wfq"])
+                    choices=["fev", "bev", "hybrid", "wfq", "slo"])
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="per-op wait budget for --policy slo")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -60,9 +64,13 @@ def main():
     if args.virtualized:
         from jax.sharding import Mesh
         from repro.core import VMM
+        from repro.serving import pool_pressure_gate
         devs = np.array(jax.devices()[:1]).reshape(1, 1)
         vmm = VMM(Mesh(devs, ("data", "model")), policy=args.policy)
-        tenant = vmm.create_vm("server", (1, 1))
+        vm_kw = {}
+        if args.policy == "slo":
+            vm_kw["sched_slo_wait_s"] = args.slo_ms / 1e3
+        tenant = vmm.create_vm("server", (1, 1), **vm_kw)
         tenant.device.open()
 
         class _Prog:
@@ -82,9 +90,12 @@ def main():
                 return tenant.device.run(*a)
             return run
 
+        # newcomers defer under pool pressure instead of bouncing on
+        # MMUError — the admission hook reads the tenant's MMU stats
         engine = ServeEngine(cfg, model, args.batch, cap,
                              page_size=args.page_size, pool=tenant.pool,
                              prefill_wrap=mediate, decode_wrap=mediate,
+                             admission_gate=pool_pressure_gate(tenant.pool),
                              extra_batch=extra)
     else:
         engine = ServeEngine(cfg, model, args.batch, cap,
@@ -114,7 +125,8 @@ def main():
           f"({new_tokens / max(dt, 1e-9):.1f} tok/s)")
     print(f"[serve] engine: {s.steps} steps, {s.prefills} newcomer "
           f"prefills (full={s.full_prefills}), {s.page_faults} page "
-          f"faults, {s.pages_leased} pages leased / {s.pages_freed} freed")
+          f"faults, {s.pages_leased} pages leased / {s.pages_freed} freed, "
+          f"{s.deferred} deferred")
     print(f"[serve] kv memory: {engine.kv.memory_stats()}")
     if args.virtualized:
         print("[serve] vmm stats:", vmm.stats())

@@ -1,4 +1,6 @@
-from repro.serving.engine import EngineStats, Request, ServeEngine
+from repro.serving.engine import (EngineStats, Request, ServeEngine,
+                                  pool_pressure_gate)
 from repro.serving.paged_kv import PagedKVCache
 
-__all__ = ["EngineStats", "PagedKVCache", "Request", "ServeEngine"]
+__all__ = ["EngineStats", "PagedKVCache", "Request", "ServeEngine",
+           "pool_pressure_gate"]

@@ -64,6 +64,10 @@ class EngineStats:
     deferred: int = 0                   # admissions bounced by the MMU
     completed: int = 0
     generated_tokens: int = 0
+    # engine-local paging deltas (NOT the pool-global counters, which
+    # also aggregate other engines sharing a tenant pool): leased counts
+    # admission-time and demand-grown pages, so leased == freed once
+    # every request has finished
     pages_leased: int = 0
     pages_freed: int = 0
     page_faults: int = 0
@@ -75,6 +79,7 @@ class ServeEngine:
                  prefill_wrap: Optional[Callable] = None,
                  decode_wrap: Optional[Callable] = None,
                  extra_batch: Optional[dict] = None, eos_id: int = -1,
+                 admission_gate: Optional[Callable] = None,
                  seed: int = 0):
         self.cfg = cfg
         self.model = model
@@ -82,6 +87,11 @@ class ServeEngine:
         self.capacity = capacity
         self.extra_batch = extra_batch or {}
         self.eos_id = eos_id
+        # admission-pressure hook: gate(owner, n_pages) -> bool. False
+        # defers the newcomer (requeued at the front) instead of letting
+        # the lease attempt bounce on MMUError — the knob a shared
+        # tenant pool uses to keep serving admission pressure-aware.
+        self.admission_gate = admission_gate
         self.rng = np.random.default_rng(seed)
         self._rid = 0
         self.waiting: "collections.deque[Request]" = collections.deque()
@@ -109,13 +119,15 @@ class ServeEngine:
         if len(prompt) > self.capacity:
             raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
                              f"KV capacity {self.capacity}")
+        # one critical section: rid assignment, future registration, and
+        # the waiting-queue append must be atomic so FIFO admission
+        # order always matches rid order under concurrent submitters
         with self._lock:
             rid = self._rid
             self._rid += 1
             self._futures[rid] = Future()
-        req = Request(rid, prompt, max_new_tokens, temperature)
-        with self._lock:
-            self.waiting.append(req)
+            self.waiting.append(Request(rid, prompt, max_new_tokens,
+                                        temperature))
         return rid
 
     def future(self, rid: int) -> Future:
@@ -125,8 +137,8 @@ class ServeEngine:
 
     def has_work(self) -> bool:
         with self._lock:
-            pending = bool(self.waiting)
-        return pending or any(r is not None for r in self.slots)
+            return (bool(self.waiting)
+                    or any(r is not None for r in self.slots))
 
     # ------------------------------------------------------------------
     # Admission: prefill the newcomer alone into freshly leased pages
@@ -147,6 +159,18 @@ class ServeEngine:
                 req = self.waiting.popleft()
             owner = f"req{req.rid}"
             plen = len(req.prompt)
+            n_pages = max(1, -(-plen // self.kv.page_size))
+            live = any(s is not None for s in self.slots)
+            if (self.admission_gate is not None and live
+                    and not self.admission_gate(owner, n_pages)):
+                # pool pressure: defer the newcomer before touching the
+                # MMU. Advisory only — with no live slot (nothing will
+                # ever free a page) we fall through to the lease attempt
+                # so true exhaustion still surfaces as MMUError below.
+                self.stats.deferred += 1
+                with self._lock:
+                    self.waiting.appendleft(req)
+                break
             try:
                 self.kv.admit(i, owner, plen)
             except MMUError:
@@ -218,13 +242,24 @@ class ServeEngine:
             elif self.positions[i] >= self.capacity:
                 self._finish(i, finished)               # KV budget: truncate
         for i in [i for i in range(self.B) if self.slots[i] is not None]:
-            try:                                        # demand paging
-                if self.kv.ensure(i, int(self.positions[i])):
-                    self.stats.page_faults = self.kv.pool.stats.page_faults
+            # demand paging — counters track engine-local deltas, never
+            # the pool-global ones (a shared --virtualized tenant pool
+            # serves other engines too); demand-grown pages count as
+            # leased so pages_leased/pages_freed balance at EOS
+            before = self.kv.tables[i].n_pages
+            try:
+                self.kv.ensure(i, int(self.positions[i]))
+                grown = self.kv.tables[i].n_pages - before
+                self.stats.page_faults += grown
+                self.stats.pages_leased += grown
             except MMUError:
                 # a shared pool ran dry mid-decode: truncate this slot
                 # (its sampled tokens are already delivered) rather than
-                # wedge the whole batch
+                # wedge the whole batch — pages grown before the failure
+                # are still accounted before _finish frees the table
+                grown = self.kv.tables[i].n_pages - before
+                self.stats.page_faults += grown
+                self.stats.pages_leased += grown
                 self._finish(i, finished)
         remaining = [i for i in range(self.B) if self.slots[i] is not None]
         if not remaining:
@@ -265,3 +300,24 @@ class ServeEngine:
             scaled = lg[hot] / temps[hot][:, None] + g
             out[hot] = np.argmax(scaled, axis=-1)
         return out
+
+
+def pool_pressure_gate(pool, util_hwm: float = 0.9,
+                       headroom_pages: int = 0) -> Callable:
+    """Admission-pressure hook over a shared ``SegmentPool``.
+
+    Returns ``gate(owner, n_pages) -> bool`` for ``ServeEngine``'s
+    ``admission_gate``: admit only while the pool can cover the ask plus
+    ``headroom_pages`` AND *post-admission* occupancy stays at or under
+    ``util_hwm`` — gating on current occupancy would let one large ask
+    fill the pool outright and re-create the mid-decode ``MMUError``
+    truncation this hook exists to prevent. Under pressure the engine
+    defers the newcomer (it retries once EOS recycling returns pages).
+    """
+    def gate(owner: str, n_pages: int) -> bool:
+        ms = pool.memory_stats()
+        total = max(ms["segments_total"], 1)
+        free = ms["segments_total"] - ms["segments_in_use"]
+        util_after = (ms["segments_in_use"] + n_pages) / total
+        return free >= n_pages + headroom_pages and util_after <= util_hwm
+    return gate

@@ -1,0 +1,203 @@
+"""IRQ-driven elastic autoscaler: sustained queue-buildup IRQs from the
+data-plane scheduler trigger a slice grow through the elastic resize
+primitive (hysteresis + cooldown), sustained calm shrinks back to
+baseline, blocked grows are recorded, and non-pressure IRQ kinds are
+ignored. Uses the fake-grid VMM from test_elastic."""
+import threading
+import time
+
+from test_elastic import _patch_mesh, fake_vmm
+
+from repro.core.autoscaler import Autoscaler
+from repro.core.scheduler import IRQ_DEGRADED, make_data_plane
+
+
+class Clock:
+    """Injectable monotonic clock for deterministic hysteresis tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _slo_vmm(tmp_path, monkeypatch, **plane_kw):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    vmm.plane.shutdown()
+    vmm.plane = make_data_plane("slo", oplog=vmm.oplog, **plane_kw)
+    return vmm
+
+
+# ===========================================================================
+# End-to-end: a real sustained queue_buildup IRQ drives a resize
+# ===========================================================================
+
+def test_sustained_buildup_irq_triggers_grow(tmp_path, monkeypatch):
+    vmm = _slo_vmm(tmp_path, monkeypatch, queue_high_watermark=4,
+                   queue_buildup_s=0.02, queue_irq_cooldown_s=0.01)
+    t = vmm.create_vm("a", (1, 1))
+    scaler = Autoscaler(vmm, sustain=2, window_s=30.0, cooldown_s=0.0,
+                        calm_s=999.0)
+    scaler.watch(t)
+    try:
+        gate = threading.Event()
+        vmm.plane.submit(t, "run", gate.wait, {})
+        time.sleep(0.02)                       # worker holds the gate op
+        futs = [vmm.plane.submit(t, "run", lambda: None, {})
+                for _ in range(8)]             # backlog above watermark
+        for _ in range(3):                     # hold it past the window
+            time.sleep(0.03)
+            futs.append(vmm.plane.submit(t, "run", lambda: None, {}))
+        gate.set()
+        for f in futs:
+            f.result(timeout=10)
+
+        actions = scaler.poll()
+        assert [a["action"] for a in actions] == ["grow"]
+        assert t.vslice.spec.shape == (1, 2)
+        # the action log is visible through VMM.stats()
+        s = vmm.stats()["autoscaler"]
+        assert s["actions"][0]["action"] == "grow"
+        assert s["actions"][0]["frm"] == (1, 1)
+        assert s["actions"][0]["to"] == (1, 2)
+        assert s["watched"]["a"]["shape"] == [1, 2]
+    finally:
+        gate.set()
+        vmm.plane.shutdown()
+
+
+# ===========================================================================
+# Hysteresis / cooldown / calm scale-down (synthetic IRQs, fake clock)
+# ===========================================================================
+
+def _irq(tenant, kind="queue_buildup", payload=None):
+    tenant.cq.raise_event(IRQ_DEGRADED, kind, payload or {"depth": 9})
+
+
+def test_hysteresis_cooldown_and_calm_shrink(tmp_path, monkeypatch):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    clk = Clock()
+    scaler = Autoscaler(vmm, sustain=3, window_s=2.0, cooldown_s=5.0,
+                        calm_s=10.0, time_fn=clk)
+    scaler.watch(t)
+
+    _irq(t)
+    _irq(t)
+    assert scaler.poll() == []                 # below the sustain bar
+    _irq(t, kind="straggler")                  # stragglers count too
+    acts = scaler.poll()
+    assert [a["action"] for a in acts] == ["grow"]
+    assert t.vslice.spec.shape == (1, 2)
+
+    clk.t = 1.0
+    for _ in range(3):
+        _irq(t)
+    assert scaler.poll() == []                 # cooldown (5s) suppresses
+    assert t.vslice.spec.shape == (1, 2)
+
+    clk.t = 6.0                                # cooldown over, but the
+    assert scaler.poll() == []                 # t=1 events fell out of
+                                               # the 2s pressure window
+    clk.t = 12.0                               # calm ≥ 10s since t=1
+    acts = scaler.poll()
+    assert [a["action"] for a in acts] == ["shrink"]
+    assert t.vslice.spec.shape == (1, 1)       # back to baseline
+
+    clk.t = 30.0
+    assert scaler.poll() == []                 # never below baseline
+    assert [a["action"] for a in vmm.stats()["autoscaler"]["actions"]] \
+        == ["grow", "shrink"]
+
+
+def test_non_pressure_irq_kinds_ignored(tmp_path, monkeypatch):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    clk = Clock()
+    scaler = Autoscaler(vmm, sustain=1, cooldown_s=0.0, time_fn=clk)
+    scaler.watch(t)
+    for _ in range(5):
+        _irq(t, kind="slice_failed", payload={"slice": 0})
+    assert scaler.poll() == []
+    assert t.vslice.spec.shape == (1, 1)
+
+
+def test_watch_chains_existing_irq_handler(tmp_path, monkeypatch):
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    seen = []
+    t.cq.set_irq(IRQ_DEGRADED, lambda ev: seen.append(ev.kind))
+    clk = Clock()
+    scaler = Autoscaler(vmm, sustain=1, cooldown_s=0.0, time_fn=clk)
+    scaler.watch(t)
+    _irq(t)
+    assert seen == ["queue_buildup"]           # user handler still runs
+    assert scaler.poll() and t.vslice.spec.shape == (1, 2)
+
+
+def test_rewatch_does_not_double_count_irqs(tmp_path, monkeypatch):
+    """Re-watching a tenant (e.g. to refresh its state template) must
+    not chain the autoscaler's handler into itself — one IRQ, one
+    recorded pressure event."""
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    clk = Clock()
+    scaler = Autoscaler(vmm, sustain=2, window_s=10.0, cooldown_s=0.0,
+                        time_fn=clk)
+    scaler.watch(t)
+    scaler.watch(t)                            # refresh, not re-chain
+    _irq(t)
+    assert vmm.stats()["autoscaler"]["watched"]["a"]["pending_events"] == 1
+    assert scaler.poll() == []                 # 1 < sustain=2
+
+
+def test_resize_error_recorded_loop_survives(tmp_path, monkeypatch):
+    """A resize failing beyond AdmissionError is recorded as an 'error'
+    action instead of escaping poll() (which would kill the background
+    thread); the next poll still works."""
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path)
+    t = vmm.create_vm("a", (1, 1))
+    clk = Clock()
+    scaler = Autoscaler(vmm, sustain=1, window_s=10.0, cooldown_s=0.0,
+                        time_fn=clk)
+    scaler.watch(t)
+    boom = RuntimeError("re-bind exploded")
+    orig = vmm.migrate_tenant
+    vmm.migrate_tenant = lambda *a, **k: (_ for _ in ()).throw(boom)
+    _irq(t)
+    acts = scaler.poll()
+    assert [a["action"] for a in acts] == ["error"]
+    assert "re-bind exploded" in acts[0]["error"]
+    vmm.migrate_tenant = orig
+    _irq(t)
+    acts = scaler.poll()                       # control loop still alive
+    assert [a["action"] for a in acts] == ["grow"]
+    assert t.vslice.spec.shape == (1, 2)
+
+
+def test_grow_blocked_is_recorded_not_fatal(tmp_path, monkeypatch):
+    """A full floorplan (even after defragmentation) records
+    grow_blocked and starts the cooldown instead of raising."""
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path, rows=2, cols=2)
+    t = vmm.create_vm("a", (1, 1))
+    for i in range(3):                         # fill the rest of the grid
+        vmm.create_vm(f"filler{i}", (1, 1))
+    clk = Clock()
+    scaler = Autoscaler(vmm, sustain=1, window_s=5.0, cooldown_s=5.0,
+                        time_fn=clk)
+    scaler.watch(t)
+    _irq(t)
+    acts = scaler.poll()
+    assert [a["action"] for a in acts] == ["grow_blocked"]
+    assert t.vslice.spec.shape == (1, 1)       # tenant intact
+    _irq(t)
+    clk.t = 1.0
+    assert scaler.poll() == []                 # cooldown applies here too

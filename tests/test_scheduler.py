@@ -1,7 +1,10 @@
 """Data-plane scheduler subsystem: the shared behavioral matrix all
-three policies must pass, plus WFQ-specific properties (weight
-proportionality, priority preemption, rate limiting), async future
-error propagation, and queue-buildup IRQs."""
+policies must pass, plus WFQ-specific properties (weight
+proportionality, priority preemption, rate limiting), SLO-plane
+properties (EDF ordering, attainment accounting, the MMU-pressure
+admission gate), queue-buildup IRQ semantics (watermark reset, buildup
+window, cooldown — pinned because the autoscaler consumes them), and
+async future error propagation."""
 import threading
 import time
 
@@ -9,13 +12,14 @@ import pytest
 
 from repro.core.interposition import OpLog
 from repro.core.scheduler import (IRQ_DEGRADED, PRIORITY_HIGH, PRIORITY_LOW,
-                                  BrokerPlane, PassthroughPlane, WFQPlane,
+                                  AdmissionPressure, BrokerPlane,
+                                  PassthroughPlane, SLOPlane, WFQPlane,
                                   make_data_plane)
 from repro.core.shell import CompletionQueue
 from repro.core.tenant import Tenant
 
-PLANES = ["fev", "bev", "hybrid", "wfq"]
-QUEUED = ["fev", "wfq"]
+PLANES = ["fev", "bev", "hybrid", "wfq", "slo"]
+QUEUED = ["fev", "wfq", "slo"]
 
 
 def mk_tenant(name="a"):
@@ -101,7 +105,7 @@ def test_stats_shape_and_counters(policy):
         for _ in range(3):
             p.execute(t, "run", lambda: None, {})
         s = p.stats()
-        assert s["policy"] in ("passthrough", "broker", "wfq")
+        assert s["policy"] in ("passthrough", "broker", "wfq", "slo")
         st = s["tenants"]["a"]
         assert st["submitted"] == 3 and st["completed"] == 3
         assert st["failed"] == 0 and st["queue_depth"] == 0
@@ -270,8 +274,9 @@ def test_wfq_priority_preemption_ordering():
         p.shutdown()
 
 
-def test_wfq_rate_limit_caps_throughput():
-    p = mk_plane("wfq")
+@pytest.mark.parametrize("policy", ["wfq", "slo"])
+def test_rate_limit_caps_throughput(policy):
+    p = mk_plane(policy)
     t = mk_tenant("capped")
     p.register(t, rate_limit_ops=20.0)        # ≤ ~20 ops/sec + 1s burst
     try:
@@ -283,6 +288,206 @@ def test_wfq_rate_limit_caps_throughput():
         # 60 ops at 20/s with a 20-op burst needs ≥ ~1.5s
         assert dt > 1.0, f"rate limit not enforced: {dt:.2f}s"
     finally:
+        p.shutdown()
+
+
+# ===========================================================================
+# SLO plane: EDF ordering, attainment accounting, MMU-pressure admission
+# ===========================================================================
+
+def _parked(p, name="park"):
+    """Hold the worker on a gate op so backlogs build deterministically."""
+    gate = threading.Event()
+    blk = mk_tenant(name)
+    p.register(blk)
+    p.submit(blk, "run", gate.wait, {})
+    time.sleep(0.02)                      # let the worker pick it up
+    return gate
+
+
+def test_slo_edf_orders_by_deadline():
+    """Within one priority class, the tenant with the tighter wait
+    budget is served first even when it submitted later."""
+    p = mk_plane("slo")
+    loose, tight = mk_tenant("loose"), mk_tenant("tight")
+    p.register(loose, slo_wait_s=10.0)
+    p.register(tight, slo_wait_s=0.01)
+    served = []
+    try:
+        gate = _parked(p)
+        fl = [p.submit(loose, "run", lambda: served.append("loose"), {})
+              for _ in range(4)]
+        ft = [p.submit(tight, "run", lambda: served.append("tight"), {})
+              for _ in range(4)]
+        gate.set()
+        for f in fl + ft:
+            f.result(timeout=10)
+        assert served == ["tight"] * 4 + ["loose"] * 4
+    finally:
+        gate.set()
+        p.shutdown()
+
+
+def test_slo_priority_class_outranks_deadline():
+    """EDF runs *within* classes: a high-priority tenant with a loose
+    budget still preempts a low-priority tenant with a tight one."""
+    p = mk_plane("slo")
+    hi, lo = mk_tenant("hi"), mk_tenant("lo")
+    p.register(hi, priority=PRIORITY_HIGH, slo_wait_s=10.0)
+    p.register(lo, priority=PRIORITY_LOW, slo_wait_s=0.001)
+    served = []
+    try:
+        gate = _parked(p)
+        fl = [p.submit(lo, "run", lambda: served.append("lo"), {})
+              for _ in range(3)]
+        fh = [p.submit(hi, "run", lambda: served.append("hi"), {})
+              for _ in range(3)]
+        gate.set()
+        for f in fl + fh:
+            f.result(timeout=10)
+        assert served == ["hi"] * 3 + ["lo"] * 3
+    finally:
+        gate.set()
+        p.shutdown()
+
+
+def test_slo_attainment_accounting():
+    """Waits within budget count as hits; a forced long wait against a
+    zero budget counts as a miss; stats expose both plus a p95."""
+    p = mk_plane("slo")
+    ok, strict = mk_tenant("ok"), mk_tenant("strict")
+    p.register(ok, slo_wait_s=30.0)
+    p.register(strict, slo_wait_s=0.0)
+    try:
+        for _ in range(3):
+            p.execute(ok, "run", lambda: None, {})
+        gate = _parked(p)
+        f = p.submit(strict, "run", lambda: None, {})   # waits ≥ park time
+        time.sleep(0.05)
+        gate.set()
+        f.result(timeout=10)
+        s = p.stats()["tenants"]
+        assert s["ok"]["slo_hits"] == 3 and s["ok"]["slo_misses"] == 0
+        assert s["ok"]["slo_attainment"] == 1.0
+        assert s["strict"]["slo_misses"] == 1
+        assert s["strict"]["p95_wait_ms"] >= 40.0
+        assert s["ok"]["slo_wait_ms"] == 30000.0
+    finally:
+        gate.set()
+        p.shutdown()
+
+
+def _pool_tenant(name, n_segs=8):
+    from repro.core.mmu import SegmentPool
+    seg = 1 << 16
+    t = Tenant(name=name, vslice=None,
+               pool=SegmentPool(total_bytes=n_segs * seg,
+                                segment_bytes=seg),
+               cq=CompletionQueue())
+    return t, seg
+
+
+def test_slo_admission_gate_denies_under_hard_pressure():
+    """A tenant whose MMU pool sits past the deny watermark gets new
+    submissions rejected with AdmissionPressure; draining the pool
+    (after the pressure cache expires) re-admits it."""
+    from repro.core.mmu import MMUError
+    p = mk_plane("slo", pressure_refresh_s=0.0, deny_hold_s=0.0)
+    t, seg = _pool_tenant("hog")
+    p.register(t)
+    try:
+        a = t.pool.alloc(8 * seg, "hog")            # occupancy 1.0
+        fut = p.submit(t, "run", lambda: 1, {})
+        assert isinstance(fut.exception(timeout=5), AdmissionPressure)
+        # a memory signal: MMU-aware callers degrade, not crash
+        assert issubclass(AdmissionPressure, MMUError)
+        assert p.stats()["tenants"]["hog"]["admission_denied"] == 1
+        assert p.stats()["tenants"]["hog"]["mem_pressure"] == 1.0
+        t.pool.free(a.handle, "hog")                 # pressure gone
+        assert p.submit(t, "run", lambda: 2, {}).result(timeout=5) == 2
+    finally:
+        p.shutdown()
+
+
+def test_slo_failed_ops_count_as_misses():
+    """A failed op never served its caller: it is an SLO miss even when
+    it failed fast inside the wait budget — attainment must not look
+    healthy exactly when ops start erroring under pressure."""
+    p = mk_plane("slo")
+    t = mk_tenant()
+    p.register(t, slo_wait_s=30.0)
+    try:
+        assert isinstance(
+            p.submit(t, "run", lambda: 1 / 0, {}).exception(timeout=5),
+            ZeroDivisionError)
+        p.execute(t, "run", lambda: None, {})
+        s = p.stats()["tenants"]["a"]
+        assert s["slo_misses"] == 1 and s["slo_hits"] == 1
+        assert s["slo_attainment"] == 0.5
+    finally:
+        p.shutdown()
+
+
+def test_slo_live_leases_exempt_from_hard_deny():
+    """Liveness carve-out: full occupancy held through live page-table
+    leases (the paged-KV serving shape) must never hard-deny — the
+    tenant's in-flight ops are the only path to EOS page reclaim."""
+    p = mk_plane("slo", pressure_refresh_s=0.0)
+    t, seg = _pool_tenant("server")
+    p.register(t)
+    try:
+        t.pool.alloc_pages(8, "server")              # occupancy 1.0
+        assert p.submit(t, "run", lambda: 3, {}).result(timeout=5) == 3
+        s = p.stats()["tenants"]["server"]
+        assert s["admission_denied"] == 0
+        assert s["mem_pressure"] == 1.0              # pressured, served
+    finally:
+        p.shutdown()
+
+
+def test_slo_admission_gate_denies_on_fresh_quota_denials():
+    """Soft occupancy + fresh per-owner quota denials (the counters the
+    fixed OOM paths now feed) ⇒ deny for deny_hold_s, then recover."""
+    from repro.core.mmu import QuotaExceeded
+    p = mk_plane("slo", pressure_refresh_s=0.0, deny_hold_s=0.05)
+    t, seg = _pool_tenant("starved")
+    p.register(t)
+    try:
+        t.pool.alloc(7 * seg, "starved")             # occupancy 0.875
+        t.pool.set_quota("starved", 7 * seg)
+        with pytest.raises(QuotaExceeded):
+            t.pool.alloc(seg, "starved")             # fresh denial
+        fut = p.submit(t, "run", lambda: 1, {})
+        assert isinstance(fut.exception(timeout=5), AdmissionPressure)
+        time.sleep(0.08)                             # deny hold expires
+        assert p.submit(t, "run", lambda: 2, {}).result(timeout=5) == 2
+    finally:
+        p.shutdown()
+
+
+def test_slo_soft_pressure_demotes_behind_class():
+    """Between the queue and deny watermarks a tenant still runs, but
+    queued behind unpressured tenants of its class."""
+    p = mk_plane("slo", pressure_refresh_s=0.0,
+                 pressure_queue_util=0.85, pressure_deny_util=1.1)
+    starved, seg = _pool_tenant("starved")
+    fine = mk_tenant("fine")
+    p.register(starved, slo_wait_s=0.001)   # tighter deadline than "fine"
+    p.register(fine, slo_wait_s=10.0)
+    starved.pool.alloc(7 * seg, "starved")  # occupancy 0.875 → demoted
+    served = []
+    try:
+        gate = _parked(p)
+        fs = [p.submit(starved, "run", lambda: served.append("starved"), {})
+              for _ in range(3)]
+        ff = [p.submit(fine, "run", lambda: served.append("fine"), {})
+              for _ in range(3)]
+        gate.set()
+        for f in fs + ff:
+            f.result(timeout=10)
+        assert served == ["fine"] * 3 + ["starved"] * 3
+    finally:
+        gate.set()
         p.shutdown()
 
 
@@ -316,13 +521,50 @@ def test_sustained_queue_buildup_raises_degraded_irq(policy):
         p.shutdown()
 
 
+def test_note_depth_window_watermark_reset_and_cooldown():
+    """Pin the buildup-IRQ state machine the autoscaler consumes: no IRQ
+    until depth has stayed at/above the watermark for the buildup
+    window; dropping below the watermark resets the window; after an
+    IRQ the cooldown suppresses re-firing until it expires."""
+    p = mk_plane("wfq", queue_high_watermark=4, queue_buildup_s=0.05,
+                 queue_irq_cooldown_s=0.2)
+    t = mk_tenant()
+    p.register(t)
+    p.shutdown()                     # stop the worker: we drive by hand
+    e = p._entries["a"]
+
+    def note(depth):
+        e.q.clear()
+        e.q.extend(object() for _ in range(depth))
+        with p._lock:
+            return p._note_depth(e)
+
+    assert note(4) is None           # watermark reached: window starts
+    assert e.buildup_since is not None
+    assert note(5) is None           # window not yet elapsed
+    assert note(2) is None           # below watermark → window reset
+    assert e.buildup_since is None
+    assert note(4) is None           # window restarts from scratch
+    time.sleep(0.06)
+    payload = note(6)                # window elapsed → IRQ payload
+    assert payload is not None
+    assert payload["depth"] == 6 and payload["since_s"] >= 0.05
+    assert note(6) is None           # cooldown suppresses re-fire
+    time.sleep(0.06)                 # window elapsed again, still cooling
+    assert note(6) is None
+    time.sleep(0.15)                 # cooldown expired (≥0.2 total)
+    assert note(6) is not None       # fires again
+    assert e.stats.queue_depth == 6  # depth mirrored into stats
+
+
 # ===========================================================================
 # Factory
 # ===========================================================================
 
 def test_factory_policy_mapping():
     for pol, cls in (("fev", BrokerPlane), ("bev", PassthroughPlane),
-                     ("hybrid", PassthroughPlane), ("wfq", WFQPlane)):
+                     ("hybrid", PassthroughPlane), ("wfq", WFQPlane),
+                     ("slo", SLOPlane)):
         p = mk_plane(pol)
         try:
             assert isinstance(p, cls)

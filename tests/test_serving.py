@@ -1,13 +1,16 @@
 """Serving engine: continuous batching over the paged KV cache —
 greedy determinism/parity, per-slot positions, O(newcomer) admission,
-EOS page recycling — native and VMM-mediated."""
+EOS page recycling, engine-local paging accounting, atomic submission,
+and the admission-pressure hook — native and VMM-mediated."""
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import ServeEngine
+from repro.serving import ServeEngine, pool_pressure_gate
 
 CFG = get_config("qwen1.5-0.5b", reduced=True)
 
@@ -204,3 +207,123 @@ def test_pages_reclaimed_and_capacity_truncation(rng_key):
     assert eng.positions[0] == -1
     assert eng.kv.pool.pages_in_use() == 0
     assert eng.kv.pool.stats.page_faults >= 1
+
+
+# ===========================================================================
+# Paging-stats accounting, atomic submission, admission-pressure hook
+# ===========================================================================
+
+def test_paging_counters_balance_with_demand_growth(rng_key):
+    """Regression: demand-grown pages must count as *leased*, so
+    pages_leased == pages_freed once every request finished (the old
+    code leased only admission-time pages but freed the whole table)."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(params, model, batch=2, cap=16)
+    rid = eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=50)
+    eng.run_round(params)
+    assert len(eng.completed[rid].out_tokens) > 0
+    # demand growth happened, and the books balance including it
+    assert eng.stats.page_faults >= 1
+    assert eng.stats.pages_leased == eng.stats.pages_freed
+    assert eng.stats.pages_leased > eng.stats.prefills  # > admission pages
+    # exclusive pool: engine-local faults equal the pool's count
+    assert eng.stats.page_faults == eng.kv.pool.stats.page_faults
+
+
+def test_paging_counters_are_engine_local_with_shared_pool(rng_key):
+    """Regression: stats.page_faults used to copy the *pool-global*
+    counter — wrong whenever a shared --virtualized tenant pool is
+    passed in. Pre-aged pool counters must not leak into the engine."""
+    from repro.core.mmu import SegmentPool
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    page_bytes = model.kv_page_bytes(8)
+    pool = SegmentPool(total_bytes=4 * page_bytes,
+                       segment_bytes=page_bytes)
+    # another engine's history on the shared pool
+    pool.stats.page_faults = 777
+    pool.stats.pages_allocated = 888
+    pool.stats.pages_freed = 888
+    eng = _engine(params, model, batch=2, cap=16, pool=pool)
+    rid = eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=50)
+    eng.run_round(params)
+    assert len(eng.completed[rid].out_tokens) > 0
+    assert 1 <= eng.stats.page_faults < 777
+    assert eng.stats.pages_leased == eng.stats.pages_freed < 888
+    assert pool.stats.page_faults == 777 + eng.stats.page_faults
+    assert pool.pages_in_use() == 0
+
+
+def test_submit_is_atomic_under_concurrent_submitters(rng_key):
+    """Regression: rid assignment, future registration, and the waiting
+    append happen in one critical section, so FIFO queue order always
+    matches rid order and every rid has a future."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(params, model, batch=2, cap=64)
+    rids = []
+    lock = threading.Lock()
+
+    def hammer():
+        for _ in range(25):
+            rid = eng.submit(np.arange(4) % CFG.vocab, max_new_tokens=1)
+            with lock:
+                rids.append(rid)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert sorted(rids) == list(range(100))
+    queued = [r.rid for r in eng.waiting]
+    assert queued == sorted(queued)                 # FIFO == rid order
+    for rid in rids:
+        assert not eng.future(rid).done()
+    eng.waiting.clear()                             # don't decode 100 reqs
+
+
+def test_admission_gate_defers_then_admits(rng_key):
+    """The admission-pressure hook defers newcomers (counted, requeued
+    at the front) while it reports pressure, and is bypassed when no
+    slot is live (deferral could never make progress)."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    calls = []
+    allow = [False]
+
+    def gate(owner, n_pages):
+        calls.append((owner, n_pages))
+        return allow[0]
+
+    eng = _engine(params, model, batch=2, cap=64, admission_gate=gate)
+    r0 = eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=3)
+    r1 = eng.submit(np.arange(9) % CFG.vocab, max_new_tokens=3)
+    eng.step(params)
+    # r0 admitted gate-free (no live slot); r1 deferred by the gate
+    assert eng.slots[0] is not None and eng.slots[0].rid == r0
+    assert eng.stats.deferred >= 1
+    assert eng.waiting[0].rid == r1                 # requeued at the front
+    assert calls and calls[0] == (f"req{r1}", 2)    # 9 tokens / page 8 → 2
+    allow[0] = True                                 # pressure clears
+    eng.run_round(params)
+    assert len(eng.completed[r0].out_tokens) == 3
+    assert len(eng.completed[r1].out_tokens) == 3
+
+
+def test_pool_pressure_gate_thresholds():
+    from repro.core.mmu import SegmentPool
+    SEG = 1 << 16
+    pool = SegmentPool(total_bytes=4 * SEG, segment_bytes=SEG)
+    gate = pool_pressure_gate(pool, util_hwm=0.75)
+    assert gate("a", 1)
+    assert not gate("a", 5)                         # can't cover the ask
+    # post-admission occupancy gates, not current: a single large ask
+    # that would fill the pool past the watermark is deferred even
+    # though the pool is empty right now
+    assert not gate("a", 4)
+    held = pool.alloc(3 * SEG, "hog")
+    assert not gate("a", 1)                         # at the watermark
+    pool.free(held.handle, "hog")
+    assert gate("a", 1)
