@@ -1,12 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fairness bench bench-paged bench-slo
+.PHONY: test smoke fairness bench bench-paged bench-slo bench-obs
 
 test:            ## tier-1 verify
 	$(PY) -m pytest -x -q
 
-smoke: test fairness bench-paged bench-slo   ## tier-1 + quick benchmark checks
+smoke: test fairness bench-paged bench-slo bench-obs   ## tier-1 + quick benchmark checks
 
 fairness:        ## WFQ vs broker vs passthrough share table (quick)
 	$(PY) benchmarks/scheduler_fairness.py --quick
@@ -16,6 +16,9 @@ bench-paged:     ## paged vs legacy serving: admission latency + tok/s
 
 bench-slo:       ## deadline attainment under overload: slo vs wfq/broker
 	$(PY) benchmarks/slo_attainment.py --quick
+
+bench-obs:       ## telemetry-plane overhead budgets (disabled <1%, enabled <5%)
+	$(PY) benchmarks/obs_overhead.py --quick
 
 bench:           ## full benchmark harness (CSV)
 	$(PY) benchmarks/run.py

@@ -1,0 +1,159 @@
+"""Telemetry-plane overhead on the serving hot path → BENCH_obs.json.
+
+The ObsHub's no-op contract is *measured here, not assumed*: the same
+churny continuous-batching trace (short/long prompts trickling in
+mid-decode, the paged_kv workload) runs three ways —
+
+* **baseline** — ``obs=None`` (the pre-telemetry construction path);
+* **disabled** — ``ObsHub(enabled=False)`` threaded through the engine,
+  KV cache and MMU pool: every instrumentation site pays its one
+  ``if obs.enabled`` attribute check;
+* **enabled**  — full tracing: spans per request, per-step histograms,
+  MMU counters, registry updates.
+
+Each mode is timed as the min over ``--repeats`` fresh runs (min is the
+noise-robust estimator for a fixed workload). Budgets are enforced
+loudly: disabled must stay under 1% over baseline, enabled under 5% —
+a regression fails the benchmark (and ``make bench-obs`` / ``smoke``).
+
+    PYTHONPATH=src python benchmarks/obs_overhead.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+DISABLED_BUDGET_PCT = 1.0
+ENABLED_BUDGET_PCT = 5.0
+
+
+def make_trace(n_requests, rng):
+    """Same bounded prompt-length universe as benchmarks/paged_kv.py."""
+    short, long_ = 12, 56
+    trace = []
+    for i in range(n_requests):
+        plen = short if i % 2 == 0 else long_
+        prompt = rng.integers(0, 512, size=(plen,)).astype(np.int32)
+        trace.append((prompt, 3 + (i % 3) * 3))
+    return trace
+
+
+def run_once(cfg, model, params, trace, batch, capacity, page_size, obs):
+    from repro.serving import ServeEngine
+
+    eng = ServeEngine(cfg, model, batch, capacity, page_size=page_size,
+                      obs=obs, obs_tenant="bench")
+    it = iter(trace)
+    prompt, budget = next(it)
+    eng.submit(prompt, max_new_tokens=budget)
+    done = 0
+    t0 = time.perf_counter()
+    while eng.has_work() or done < len(trace):
+        finished = eng.step(params)
+        done += len(finished)
+        for _ in range(1 + len(finished)):
+            nxt = next(it, None)
+            if nxt is not None:
+                eng.submit(nxt[0], max_new_tokens=nxt[1])
+    dt = time.perf_counter() - t0
+    return dt, eng
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_obs.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.requests = min(args.requests, 12)
+        args.repeats = min(args.repeats, 3)
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.obs import ObsHub
+
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = make_trace(args.requests, np.random.default_rng(0))
+
+    modes = {
+        "baseline": lambda: None,
+        "disabled": lambda: ObsHub(enabled=False),
+        "enabled": lambda: ObsHub(enabled=True),
+    }
+    results = {}
+    last_enabled_hub = None
+    # one warmup pass populates the jit caches for every mode alike
+    run_once(cfg, model, params, trace, args.batch, args.capacity,
+             args.page_size, None)
+    for name, mk in modes.items():
+        times = []
+        for _ in range(args.repeats):
+            obs = mk()
+            dt, _eng = run_once(cfg, model, params, trace, args.batch,
+                                args.capacity, args.page_size, obs)
+            times.append(dt)
+            if name == "enabled":
+                last_enabled_hub = obs
+        results[name] = {"min_s": min(times), "mean_s": float(np.mean(times)),
+                         "runs": times}
+        print(f"[obs_overhead] {name:8s}: min {min(times):.3f}s  "
+              f"mean {np.mean(times):.3f}s over {args.repeats} runs")
+
+    base = results["baseline"]["min_s"]
+    for name in ("disabled", "enabled"):
+        pct = max((results[name]["min_s"] - base) / base * 100.0, 0.0)
+        results[name]["overhead_pct"] = pct
+
+    # sanity: the enabled run actually recorded telemetry
+    snap = last_enabled_hub.snapshot(providers=False)
+    recorded = {
+        "spans_finished": sum(
+            t["finished"] for t in snap["traces"]["tenants"].values()),
+        "histogram_samples": sum(
+            s["count"] for series in snap["metrics"]["histograms"].values()
+            for s in series.values()),
+        "counter_total": sum(
+            v for series in snap["metrics"]["counters"].values()
+            for v in series.values()),
+    }
+    results["enabled"]["recorded"] = recorded
+    results["config"] = {"requests": args.requests, "repeats": args.repeats,
+                         "batch": args.batch, "capacity": args.capacity,
+                         "page_size": args.page_size,
+                         "budgets_pct": {"disabled": DISABLED_BUDGET_PCT,
+                                         "enabled": ENABLED_BUDGET_PCT}}
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[obs_overhead] disabled +{results['disabled']['overhead_pct']:.2f}%"
+          f", enabled +{results['enabled']['overhead_pct']:.2f}% "
+          f"(recorded {recorded['spans_finished']} spans, "
+          f"{recorded['histogram_samples']:.0f} histogram samples) "
+          f"→ {args.out}")
+
+    assert recorded["spans_finished"] == args.requests, \
+        "enabled mode must trace every request"
+    assert results["disabled"]["overhead_pct"] < DISABLED_BUDGET_PCT, (
+        f"OBS OVERHEAD REGRESSION: disabled hub costs "
+        f"{results['disabled']['overhead_pct']:.2f}% on the serving path "
+        f"(budget {DISABLED_BUDGET_PCT}%) — a hot-path site is doing work "
+        f"without its `if obs.enabled` guard")
+    assert results["enabled"]["overhead_pct"] < ENABLED_BUDGET_PCT, (
+        f"OBS OVERHEAD REGRESSION: enabled tracing costs "
+        f"{results['enabled']['overhead_pct']:.2f}% on the serving path "
+        f"(budget {ENABLED_BUDGET_PCT}%) — some instrumentation site got "
+        f"too expensive for per-step/per-op recording")
+
+
+if __name__ == "__main__":
+    main()

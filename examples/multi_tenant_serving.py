@@ -26,13 +26,18 @@ import jax.numpy as jnp                           # noqa: E402
 from repro.core import (VMM, LegalityError, PRIORITY_HIGH,  # noqa: E402
                         ProgramRequest, report)
 from repro.launch.mesh import make_local_mesh     # noqa: E402
+from repro.obs import ObsHub                      # noqa: E402
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--policy", default="wfq", choices=["wfq", "slo"])
+ap.add_argument("--metrics", action="store_true",
+                help="enable the telemetry plane and print the "
+                     "Prometheus exposition at exit")
 cli = ap.parse_args()
 
 mesh = make_local_mesh((2, 4))
-vmm = VMM(mesh, policy=cli.policy, ckpt_root=tempfile.mkdtemp())
+vmm = VMM(mesh, policy=cli.policy, ckpt_root=tempfile.mkdtemp(),
+          obs=ObsHub(enabled=cli.metrics))
 
 if cli.policy == "slo":
     # deadline classes instead of weights: alice is latency-sensitive
@@ -85,4 +90,7 @@ for name, s in sched["tenants"].items():
                  f"p95_wait={s['p95_wait_ms']:.2f}ms")
     print(line)
 print(report(vmm).to_markdown())
+if cli.metrics:
+    print("[obs] prometheus exposition:")
+    print(vmm.obs.prometheus())
 vmm.shutdown()

@@ -181,6 +181,14 @@ class Autoscaler:
             self.actions.append(act)
             w.last_action = now
             w.events.clear()
+        obs = getattr(self.vmm, "obs", None)
+        if obs is not None and obs.enabled:
+            obs.count("autoscaler_actions_total", tenant=w.tenant.name,
+                      action=fields.get("action", "unknown"))
+            # grow_blocked is a flight-recorder trigger — the dump shows
+            # the IRQ pressure that led to the unplaceable resize
+            obs.flight_record(w.tenant.name, fields.get("action", "action"),
+                              {k: v for k, v in act.items() if k != "tenant"})
         return act
 
     def _grow(self, w: _Watch, now: float, n_events: int) -> Optional[dict]:

@@ -80,6 +80,29 @@ class OpLog:
                            if r.op not in self.CONTROL_OPS)
             return n_logged / max(self._n_data_ops, 1)
 
+    def op_latency_stats(self) -> dict:
+        """Per-op latency rollup from the ``perf_counter`` stamps every
+        record already carries: ``{op: {count, mean_ms, p50_ms,
+        p95_ms}}`` over completed records. This is the registry surface
+        ``VMM.stats()["ops"]`` exposes (and fig6b reads) instead of
+        benchmarks re-measuring with private timers."""
+        with self._lock:
+            by_op = {}
+            for r in self.records:
+                if r.t_end > 0.0:
+                    by_op.setdefault(r.op, []).append(r.duration_ms)
+        out = {}
+        for op, ds in by_op.items():
+            ds.sort()
+            n = len(ds)
+            out[op] = {
+                "count": n,
+                "mean_ms": sum(ds) / n,
+                "p50_ms": ds[n // 2],
+                "p95_ms": ds[min(int(0.95 * (n - 1)), n - 1)],
+            }
+        return out
+
 
 class TenantCheckpointer:
     """Snapshot / restore of tenant device state (incl. re-sharding)."""

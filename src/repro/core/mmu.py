@@ -281,7 +281,8 @@ class SegmentPool:
     """One slice's HBM pool: backend allocator + ownership + quotas."""
 
     def __init__(self, total_bytes: int, backend: str = "bitmap",
-                 segment_bytes: int = SEGMENT_BYTES, auditor=None):
+                 segment_bytes: int = SEGMENT_BYTES, auditor=None,
+                 obs=None):
         self.segment_bytes = segment_bytes
         self.n_segments = max(1, total_bytes // segment_bytes)
         self.backend_name = backend
@@ -292,6 +293,9 @@ class SegmentPool:
         self.denied_by_owner: Dict[str, int] = {}
         self.stats = MMUStats()
         self.auditor = auditor
+        # telemetry hub (repro.obs.ObsHub); None/disabled → zero-cost.
+        # Registry stripe locks only ever nest *inside* the pool lock.
+        self.obs = obs
         self._next_handle = 0
         self._lock = threading.Lock()
 
@@ -309,9 +313,11 @@ class SegmentPool:
                     if t.owner == owner)
         return segs
 
-    def _deny(self, owner: str):
+    def _deny(self, owner: str, cause: str = "denied"):
         self.stats.denied += 1
         self.denied_by_owner[owner] = self.denied_by_owner.get(owner, 0) + 1
+        if self.obs is not None and self.obs.enabled:
+            self.obs.count("mmu_denials_total", owner=owner, cause=cause)
 
     def alloc(self, n_bytes: int, owner: str) -> Allocation:
         n_segs = max(1, -(-n_bytes // self.segment_bytes))
@@ -319,7 +325,7 @@ class SegmentPool:
         with self._lock:
             q = self.quota_segs.get(owner)
             if q is not None and self._owner_segs(owner) + n_segs > q:
-                self._deny(owner)
+                self._deny(owner, "quota_exceeded")
                 if self.auditor:
                     self.auditor.record("quota_exceeded", owner,
                                         {"ask_segs": n_segs, "quota": q})
@@ -328,7 +334,7 @@ class SegmentPool:
             if start is None:
                 # _deny, not a bare stats bump: OOM must show up in the
                 # per-owner denial counts the SLO admission gate reads
-                self._deny(owner)
+                self._deny(owner, "oom")
                 raise OutOfMemory(
                     f"{owner}: {n_segs} segs; "
                     f"{self.alloc_backend.free_segments()} free")
@@ -337,9 +343,13 @@ class SegmentPool:
             a = Allocation(h, owner, start, n_segs, n_bytes)
             self.allocations[h] = a
             self.stats.allocs += 1
-            self.stats.alloc_ns_total += time.perf_counter_ns() - t0
+            dt_ns = time.perf_counter_ns() - t0
+            self.stats.alloc_ns_total += dt_ns
             used = self.n_segments - self.alloc_backend.free_segments()
             self.stats.peak_segs = max(self.stats.peak_segs, used)
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_allocs_total", owner=owner)
+                self.obs.observe("mmu_alloc_s", dt_ns / 1e9)
             return a
 
     def free(self, handle: int, owner: str):
@@ -365,6 +375,8 @@ class SegmentPool:
         Holds the pool lock: ``self.allocations`` must not be read racily
         against a concurrent ``free()`` (handle reuse / mid-delete).
         """
+        t0 = time.perf_counter_ns() \
+            if self.obs is not None and self.obs.enabled else 0
         with self._lock:
             a = self.allocations.get(handle)
             if a is None:
@@ -381,7 +393,11 @@ class SegmentPool:
                 self.stats.denied += 1
                 raise IsolationViolation(
                     f"offset {offset} outside allocation of {a.n_bytes} bytes")
-            return a.start_seg * self.segment_bytes + offset
+            addr = a.start_seg * self.segment_bytes + offset
+        if t0:
+            self.obs.observe("mmu_translate_s",
+                             (time.perf_counter_ns() - t0) / 1e9)
+        return addr
 
     # ==================================================================
     # Page-table API (page = one segment, no contiguity — the paged KV
@@ -391,7 +407,7 @@ class SegmentPool:
         """n single-segment pages, or raise (lock held by caller)."""
         q = self.quota_segs.get(owner)
         if q is not None and self._owner_segs(owner) + n > q:
-            self._deny(owner)
+            self._deny(owner, "quota_exceeded")
             if self.auditor:
                 self.auditor.record("quota_exceeded", owner,
                                     {"ask_pages": n, "quota": q})
@@ -402,7 +418,7 @@ class SegmentPool:
             if start is None:
                 for p in pages:                      # roll back partial
                     self.alloc_backend.free(p, 1)
-                self._deny(owner)
+                self._deny(owner, "oom")
                 raise OutOfMemory(
                     f"{owner}: {n} pages; "
                     f"{self.alloc_backend.free_segments()} free")
@@ -410,6 +426,8 @@ class SegmentPool:
         self.stats.pages_allocated += n
         used = self.n_segments - self.alloc_backend.free_segments()
         self.stats.peak_segs = max(self.stats.peak_segs, used)
+        if self.obs is not None and self.obs.enabled:
+            self.obs.count("mmu_pages_allocated_total", n, owner=owner)
         return pages
 
     def alloc_pages(self, n: int, owner: str) -> PageTable:
@@ -428,6 +446,8 @@ class SegmentPool:
             t = self._check_table(handle, owner, "cross_owner_grow")
             t.pages.extend(self._alloc_single_pages(n, owner))
             self.stats.page_faults += 1
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_page_faults_total", owner=owner)
             return t
 
     def free_pages(self, handle: int, owner: str):
@@ -437,6 +457,9 @@ class SegmentPool:
                 self.alloc_backend.free(p, 1)
             self.stats.pages_freed += t.n_pages
             self.stats.frees += 1
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_pages_freed_total", t.n_pages,
+                               owner=owner)
             del self.page_tables[handle]
 
     def translate_page(self, handle: int, owner: str, logical: int) -> int:

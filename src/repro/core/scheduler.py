@@ -59,6 +59,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
 from repro.core.mmu import MMUError
+from repro.obs import NULL_HUB
 
 # IRQ sources (shared with the VMM; re-exported from repro.core.vmm for
 # backward compatibility).
@@ -160,8 +161,9 @@ class DataPlane:
     def __init__(self, oplog=None, straggler_factor: float = 4.0,
                  log_ops: bool = True, queue_high_watermark: int = 64,
                  queue_buildup_s: float = 0.25,
-                 queue_irq_cooldown_s: float = 1.0):
+                 queue_irq_cooldown_s: float = 1.0, obs=None):
         self.oplog = oplog
+        self.obs = obs if obs is not None else NULL_HUB
         self.straggler_factor = straggler_factor
         self.log_ops = log_ops
         self.queue_high_watermark = queue_high_watermark
@@ -251,6 +253,13 @@ class DataPlane:
                     # lock and BEFORE the future resolves, so a caller
                     # woken by the result sees stats that include it
                     self._account_locked(e, job, dt, ok)
+            if self.obs.enabled:
+                wait = max(0.0, time.monotonic() - job.t_submit - dt)
+                self.obs.observe("plane_wait_s", wait, tenant=t.name)
+                self.obs.observe("plane_service_s", dt, tenant=t.name,
+                                 op=job.op)
+                self.obs.count("plane_ops_total", tenant=t.name, op=job.op,
+                               status="ok" if ok else "error")
         if ok:
             job.future.set_result(val)
         else:
@@ -270,6 +279,11 @@ class DataPlane:
             e = self._entries.get(t.name)
             if e is not None:
                 e.stats.stragglers += 1
+            if self.obs.enabled:
+                self.obs.count("plane_stragglers_total", tenant=t.name,
+                               op=op)
+                self.obs.flight_record(t.name, "straggler",
+                                       {"op": op, "dt": dt, "ewma": ew})
             t.cq.raise_event(IRQ_DEGRADED, "straggler",
                              {"op": op, "dt": dt, "ewma": ew})
         self._ewma[key] = dt if ew is None else 0.8 * ew + 0.2 * dt
@@ -345,6 +359,11 @@ class _QueuedPlane(DataPlane):
             buildup = self._note_depth(e)
             self._cv.notify()
         if buildup is not None:
+            if self.obs.enabled:
+                self.obs.count("plane_buildup_irqs_total",
+                               tenant=tenant.name)
+                self.obs.flight_record(tenant.name, "queue_buildup",
+                                       buildup)
             tenant.cq.raise_event(IRQ_DEGRADED, "queue_buildup", buildup)
         return job.future
 
@@ -579,6 +598,12 @@ class SLOPlane(_QueuedPlane):
                 if denied:
                     e.admission_denied += 1
             if denied:
+                if self.obs.enabled:
+                    self.obs.count("plane_admission_denied_total",
+                                   tenant=tenant.name)
+                    self.obs.flight_record(
+                        tenant.name, "admission_pressure",
+                        {"op": op, "mem_pressure": e.mem_pressure})
                 fut = Future()
                 fut.set_exception(AdmissionPressure(
                     f"{tenant.name}: memory pressure "

@@ -45,20 +45,42 @@ class TransferStats:
 
 
 class TransferEngine:
-    """Host↔device data path with VM-copy / VM-nocopy modes."""
+    """Host↔device data path with VM-copy / VM-nocopy modes.
 
-    def __init__(self, mode: str = "vm_copy", staging_bytes: int = 2 ** 28):
+    Locking: the byte/nanosecond counters are read-modify-write state
+    shared by every concurrent transfer, so *all* updates go through a
+    dedicated ``_stats_lock`` — never bare ``+=`` on the dataclass.
+    The separate ``_lock`` protects only the shared staging buffer
+    (VM-copy), which means VM-nocopy transfers no longer serialize on
+    the engine at all.
+    """
+
+    def __init__(self, mode: str = "vm_copy", staging_bytes: int = 2 ** 28,
+                 obs=None):
         assert mode in ("vm_copy", "vm_nocopy")
         self.mode = mode
         self.stats = TransferStats()
+        self.obs = obs
         self._staging = np.empty(staging_bytes, dtype=np.uint8)
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()          # staging buffer only
+        self._stats_lock = threading.Lock()    # all counter updates
+
+    def _account_h2d(self, nbytes: int, guest_copy_ns: int, dma_ns: int):
+        with self._stats_lock:
+            self.stats.guest_copy_ns += guest_copy_ns
+            self.stats.dma_ns += dma_ns
+            self.stats.h2d_bytes += nbytes
+        if self.obs is not None and self.obs.enabled:
+            self.obs.count("dma_h2d_bytes_total", nbytes)
+            self.obs.observe("dma_h2d_s", (guest_copy_ns + dma_ns) / 1e9)
 
     def h2d(self, guest_array: np.ndarray, device=None, sharding=None):
         """Guest buffer → device. Returns the device array."""
         nbytes = guest_array.nbytes
-        with self._lock:
-            if self.mode == "vm_copy":
+        if self.mode == "vm_copy":
+            # the staging buffer is shared: hold its lock from the copy
+            # through device_put (src is a view into staging)
+            with self._lock:
                 t0 = time.perf_counter_ns()
                 if nbytes > self._staging.nbytes:
                     self._staging = np.empty(nbytes, dtype=np.uint8)
@@ -66,25 +88,34 @@ class TransferEngine:
                 staged = view.reshape(guest_array.shape)
                 np.copyto(staged, guest_array)
                 t1 = time.perf_counter_ns()
-                self.stats.guest_copy_ns += t1 - t0
-                src = staged
-            else:
-                t1 = time.perf_counter_ns()
-                src = guest_array
-            dst = sharding if sharding is not None else device
-            out = (jax.device_put(src, dst) if dst is not None
-                   else jax.device_put(src))
-            out.block_until_ready()
-            self.stats.dma_ns += time.perf_counter_ns() - t1
-            self.stats.h2d_bytes += nbytes
+                out = self._device_put(staged, device, sharding)
+                t2 = time.perf_counter_ns()
+            self._account_h2d(nbytes, t1 - t0, t2 - t1)
+        else:
+            t1 = time.perf_counter_ns()
+            out = self._device_put(guest_array, device, sharding)
+            t2 = time.perf_counter_ns()
+            self._account_h2d(nbytes, 0, t2 - t1)
+        return out
+
+    @staticmethod
+    def _device_put(src, device, sharding):
+        dst = sharding if sharding is not None else device
+        out = (jax.device_put(src, dst) if dst is not None
+               else jax.device_put(src))
+        out.block_until_ready()
         return out
 
     def d2h(self, device_array) -> np.ndarray:
         t0 = time.perf_counter_ns()
         out = np.asarray(jax.device_get(device_array))
-        with self._lock:
-            self.stats.d2h_ns += time.perf_counter_ns() - t0
+        dt = time.perf_counter_ns() - t0
+        with self._stats_lock:
+            self.stats.d2h_ns += dt
             self.stats.d2h_bytes += out.nbytes
+        if self.obs is not None and self.obs.enabled:
+            self.obs.count("dma_d2h_bytes_total", out.nbytes)
+            self.obs.observe("dma_d2h_s", dt / 1e9)
         return out
 
 
@@ -95,10 +126,19 @@ class TransferEngine:
 
 @dataclass
 class Event:
+    """One completion-queue event.
+
+    ``ts`` is ``time.monotonic()`` — the clock every latency consumer
+    (scheduler wait math, autoscaler hysteresis windows, the tracer)
+    already runs on, so event ages are safe to subtract. ``wall`` is
+    wall-clock for display/log correlation only; never do arithmetic
+    across the two.
+    """
     source: int
     kind: str
     payload: dict = field(default_factory=dict)
-    ts: float = field(default_factory=time.time)
+    ts: float = field(default_factory=time.monotonic)
+    wall: float = field(default_factory=time.time)
 
 
 class CompletionQueue:

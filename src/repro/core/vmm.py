@@ -45,6 +45,7 @@ from repro.core.scheduler import (IRQ_DEGRADED, IRQ_DONE,  # noqa: F401
 from repro.core.shell import CompletionQueue, TransferEngine
 from repro.core.tenant import GuestBuffer, GuestDevice, Tenant
 from repro.core.vslice import Floorplanner
+from repro.obs import NULL_HUB, ObsHub
 
 
 class AdmissionError(Exception):
@@ -60,17 +61,23 @@ class VMM:
                  ckpt_root: str = "/tmp/vpod_ckpt",
                  straggler_factor: float = 4.0,
                  oplog_sampling: float = 1.0,
-                 scheduler_opts: Optional[dict] = None):
+                 scheduler_opts: Optional[dict] = None,
+                 obs: Optional[ObsHub] = None):
         assert policy in POLICIES
         self.policy = policy
         self.mmu_backend = mmu_backend
         self.hbm_per_chip = hbm_per_chip
         self.segment_bytes = segment_bytes
+        # Telemetry plane (repro.obs): every subsystem below reports
+        # into this hub's registry/tracer/flight recorder. Disabled by
+        # default — pass ObsHub(enabled=True) (or --metrics in
+        # launch/serve.py) to turn the lights on.
+        self.obs = obs if obs is not None else NULL_HUB
         self.floorplanner = Floorplanner(pod_mesh)
         self.auditor = IsolationAuditor()
         self.oplog = OpLog(sample_data_plane=(
             oplog_sampling if policy == "hybrid" else 1.0))
-        self.transfer = TransferEngine(mode=transfer_mode)
+        self.transfer = TransferEngine(mode=transfer_mode, obs=self.obs)
         self.compiler = CompileService()
         self.loader = ProgramLoader(auditor=self.auditor)
         self.checkpointer = TenantCheckpointer(ckpt_root)
@@ -79,9 +86,27 @@ class VMM:
         # Data-plane dispatch is fully delegated to the scheduler subsystem.
         self.plane = make_data_plane(policy, oplog=self.oplog,
                                      straggler_factor=straggler_factor,
+                                     obs=self.obs,
                                      **(scheduler_opts or {}))
         # Set by repro.core.autoscaler.Autoscaler when one attaches.
         self.autoscaler = None
+        # Legacy stats() trees re-registered as providers: the registry
+        # snapshot exposes the same data the six ad-hoc dicts used to,
+        # under one schema (obs.snapshot()["metrics"]["providers"]).
+        reg = self.obs.registry
+        reg.register_provider("scheduler", self.plane.stats)
+        reg.register_provider("transfer",
+                              lambda: dict(self.transfer.stats.__dict__))
+        reg.register_provider("ops", self.oplog.op_latency_stats)
+        reg.register_provider("memory", self._memory_stats)
+        reg.register_provider(
+            "floorplan",
+            lambda: {"util": self.floorplanner.utilization(),
+                     "fragmentation": self.floorplanner.fragmentation()})
+        reg.register_provider(
+            "autoscaler",
+            lambda: (self.autoscaler.stats()
+                     if self.autoscaler is not None else None))
 
     # Straggler EWMA state lives in the plane; keep the historical
     # ``vmm.straggler_factor`` knob working (tests tune it post-init).
@@ -112,7 +137,7 @@ class VMM:
         pool = mmu_mod.SegmentPool(
             total_bytes=vs.n_devices * self.hbm_per_chip,
             backend=self.mmu_backend, segment_bytes=self.segment_bytes,
-            auditor=self.auditor)
+            auditor=self.auditor, obs=self.obs)
         t = Tenant(name=name, vslice=vs, pool=pool,
                    cq=CompletionQueue())
         t.device = GuestDevice(self, t)
@@ -127,6 +152,10 @@ class VMM:
         with self._lock:
             self.tenants[name] = t
         self.plane.register(t, **sched_kw)
+        if self.obs.enabled:
+            self.obs.count("vmm_admissions_total", tenant=name)
+            self.obs.flight_record(name, "admit",
+                                   {"shape": list(slice_shape)})
         self.oplog.end(rec)
         return t
 
@@ -137,6 +166,9 @@ class VMM:
         self.plane.unregister(name)
         self.loader.unload(t.vslice)
         self.floorplanner.free(t.vslice.slice_id)
+        if self.obs.enabled:
+            self.obs.count("vmm_evictions_total", tenant=name)
+            self.obs.flight.forget(name)
         self.oplog.end(rec)
 
     # ==================================================================
@@ -312,6 +344,14 @@ class VMM:
         for t in self.tenants.values():
             if t.vslice.slice_id == slice_id:
                 t.vslice.healthy = False
+                # record BEFORE raising: slice_failed is a flight-
+                # recorder trigger, so the auto-dump taken here already
+                # contains the failure event itself
+                if self.obs.enabled:
+                    self.obs.count("vmm_slice_failures_total",
+                                   tenant=t.name)
+                    self.obs.flight_record(t.name, "slice_failed",
+                                           {"slice": slice_id})
                 t.cq.raise_event(IRQ_DEGRADED, "slice_failed",
                                  {"slice": slice_id})
 
@@ -343,7 +383,7 @@ class VMM:
         pool = mmu_mod.SegmentPool(
             total_bytes=vs.n_devices * self.hbm_per_chip,
             backend=self.mmu_backend, segment_bytes=self.segment_bytes,
-            auditor=self.auditor)
+            auditor=self.auditor, obs=self.obs)
         if t.name in t.pool.quota_segs:
             pool.quota_segs[t.name] = t.pool.quota_segs[t.name]
         t.pool = pool
@@ -361,15 +401,18 @@ class VMM:
     def shutdown(self):
         self.plane.shutdown()
 
-    def stats(self) -> dict:
+    def _memory_stats(self) -> dict:
         with self._lock:
             tenants = dict(self.tenants)
+        return {name: t.pool.memory_stats() for name, t in tenants.items()}
+
+    def stats(self) -> dict:
+        memory = self._memory_stats()
         return {
-            "tenants": len(tenants),
+            "tenants": len(memory),
             # per-tenant MMU paging view (pages in use, fragmentation,
             # quota denials) — the SLO scheduler follow-up reads this
-            "memory": {name: t.pool.memory_stats()
-                       for name, t in tenants.items()},
+            "memory": memory,
             "floorplan_util": self.floorplanner.utilization(),
             "fragmentation": self.floorplanner.fragmentation(),
             "compile_hits": self.compiler.hits,
@@ -378,9 +421,16 @@ class VMM:
             "violations": self.auditor.summary(),
             "transfer": self.transfer.stats.__dict__,
             "oplog_records": len(self.oplog.records),
+            # per-op latency rollup (p50/p95/mean) from the OpRecord
+            # perf_counter stamps — fig6b reads this instead of private
+            # timers
+            "ops": self.oplog.op_latency_stats(),
             "scheduler": self.plane.stats(),
             # elastic-resize action log (None until an Autoscaler attaches)
             "autoscaler": (self.autoscaler.stats()
                            if getattr(self, "autoscaler", None) is not None
                            else None),
+            # the unified telemetry tree (metrics/traces/flight); the
+            # providers view inside it mirrors the legacy keys above
+            "obs": self.obs.snapshot(providers=False),
         }

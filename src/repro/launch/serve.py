@@ -39,11 +39,18 @@ def main():
                     choices=["fev", "bev", "hybrid", "wfq", "slo"])
     ap.add_argument("--slo-ms", type=float, default=50.0,
                     help="per-op wait budget for --policy slo")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the telemetry plane (request spans, "
+                         "unified metrics registry, flight recorder); "
+                         "prints the Prometheus exposition at exit")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.models import build_model
+    from repro.obs import ObsHub
     from repro.serving import ServeEngine
+
+    obs = ObsHub(enabled=args.metrics)
 
     cfg = get_config(args.arch, reduced=not args.full)
     model = build_model(cfg)
@@ -66,7 +73,8 @@ def main():
         from repro.core import VMM
         from repro.serving import pool_pressure_gate
         devs = np.array(jax.devices()[:1]).reshape(1, 1)
-        vmm = VMM(Mesh(devs, ("data", "model")), policy=args.policy)
+        vmm = VMM(Mesh(devs, ("data", "model")), policy=args.policy,
+                  obs=obs)
         vm_kw = {}
         if args.policy == "slo":
             vm_kw["sched_slo_wait_s"] = args.slo_ms / 1e3
@@ -96,10 +104,12 @@ def main():
                              page_size=args.page_size, pool=tenant.pool,
                              prefill_wrap=mediate, decode_wrap=mediate,
                              admission_gate=pool_pressure_gate(tenant.pool),
-                             extra_batch=extra)
+                             extra_batch=extra, obs=obs,
+                             obs_tenant="server")
     else:
         engine = ServeEngine(cfg, model, args.batch, cap,
-                             page_size=args.page_size, extra_batch=extra)
+                             page_size=args.page_size, extra_batch=extra,
+                             obs=obs, obs_tenant="server")
 
     for i in range(args.requests):
         plen = args.prompt_len + int(rng.integers(0, 8))
@@ -128,6 +138,22 @@ def main():
           f"faults, {s.pages_leased} pages leased / {s.pages_freed} freed, "
           f"{s.deferred} deferred")
     print(f"[serve] kv memory: {engine.kv.memory_stats()}")
+    if args.metrics:
+        snap = obs.tracer.snapshot()
+        for name, ts in snap["tenants"].items():
+            ttft = ts["ttft_s"]
+            qw = ts["queue_wait_s"]
+            print(f"[obs] {name}: {ts['finished']} finished, "
+                  f"{ts['tokens']} tokens; "
+                  f"ttft p50={1e3 * ttft['p50']:.1f}ms "
+                  f"p95={1e3 * ttft['p95']:.1f}ms; "
+                  f"queue-wait p50={1e3 * qw['p50']:.1f}ms"
+                  if ttft and qw else f"[obs] {name}: {ts}")
+        if obs.flight.dumps:
+            print(f"[obs] flight-recorder dumps: "
+                  f"{[d['reason'] for d in obs.flight.dumps]}")
+        print("[obs] prometheus exposition:")
+        print(obs.prometheus())
     if args.virtualized:
         print("[serve] vmm stats:", vmm.stats())
         vmm.shutdown()

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -34,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mmu import MMUError
+from repro.obs import (NULL_HUB, PHASE_ADMITTED, PHASE_DECODE,
+                       PHASE_DEFERRED, PHASE_PREFILL)
 from repro.serving.paged_kv import PagedKVCache
 
 
@@ -80,13 +83,21 @@ class ServeEngine:
                  decode_wrap: Optional[Callable] = None,
                  extra_batch: Optional[dict] = None, eos_id: int = -1,
                  admission_gate: Optional[Callable] = None,
-                 seed: int = 0):
+                 seed: int = 0, obs=None, obs_tenant: str = "serve"):
         self.cfg = cfg
         self.model = model
         self.B = batch_size
         self.capacity = capacity
         self.extra_batch = extra_batch or {}
         self.eos_id = eos_id
+        # telemetry hub: request-lifecycle spans (queued → admitted →
+        # prefill → decode × N → done/deferred) land in obs.tracer under
+        # the ``obs_tenant`` label; disabled hub → one attr check per site
+        self.obs = obs if obs is not None else NULL_HUB
+        self.obs_tenant = obs_tenant
+        if self.obs.enabled:
+            self.obs.registry.register_provider(
+                f"engine/{obs_tenant}", lambda: dict(self.stats.__dict__))
         # admission-pressure hook: gate(owner, n_pages) -> bool. False
         # defers the newcomer (requeued at the front) instead of letting
         # the lease attempt bounce on MMUError — the knob a shared
@@ -106,7 +117,8 @@ class ServeEngine:
                    if "frames" in self.extra_batch else None)
         self.kv = PagedKVCache(cfg, model, batch_size, capacity,
                                page_size=page_size, pool=pool,
-                               auditor=auditor, enc_len=enc_len)
+                               auditor=auditor, enc_len=enc_len,
+                               obs=self.obs)
         self._logits: Optional[np.ndarray] = None    # (B, V*) host copy
         pf = jax.jit(lambda p, b: model.prefill(p, b))
         df = jax.jit(model.decode_paged, donate_argnums=(1,))
@@ -128,6 +140,10 @@ class ServeEngine:
             self._futures[rid] = Future()
             self.waiting.append(Request(rid, prompt, max_new_tokens,
                                         temperature))
+        if self.obs.enabled:
+            self.obs.tracer.start(self.obs_tenant, rid,
+                                  prompt_len=len(prompt),
+                                  max_new_tokens=max_new_tokens)
         return rid
 
     def future(self, rid: int) -> Future:
@@ -168,15 +184,23 @@ class ServeEngine:
                 # ever free a page) we fall through to the lease attempt
                 # so true exhaustion still surfaces as MMUError below.
                 self.stats.deferred += 1
+                if self.obs.enabled:
+                    self.obs.tracer.event(self.obs_tenant, req.rid,
+                                          PHASE_DEFERRED,
+                                          cause="pool_pressure")
                 with self._lock:
                     self.waiting.appendleft(req)
                 break
             try:
                 self.kv.admit(i, owner, plen)
-            except MMUError:
+            except MMUError as exc:
                 # pool exhausted / quota: requeue at the front, retry
                 # next step once EOS recycling returns pages
                 self.stats.deferred += 1
+                if self.obs.enabled:
+                    self.obs.tracer.event(self.obs_tenant, req.rid,
+                                          PHASE_DEFERRED,
+                                          cause=type(exc).__name__)
                 with self._lock:
                     self.waiting.appendleft(req)
                 if all(s is None for s in self.slots):
@@ -184,9 +208,16 @@ class ServeEngine:
                     # exhaustion instead of busy-spinning run_round()
                     raise
                 break
+            if self.obs.enabled:
+                self.obs.tracer.event(self.obs_tenant, req.rid,
+                                      PHASE_ADMITTED, slot=i,
+                                      pages=self.kv.tables[i].n_pages)
             logits, caches = self._prefill_fn(
                 params, self._newcomer_batch(i, req))
             self.kv.write_prefill(caches, i, plen)
+            if self.obs.enabled:
+                self.obs.tracer.event(self.obs_tenant, req.rid,
+                                      PHASE_PREFILL, tokens=plen)
             logits = np.asarray(jax.device_get(logits), np.float32)
             if self._logits is None:
                 self._logits = np.zeros((self.B, logits.shape[-1]),
@@ -211,6 +242,9 @@ class ServeEngine:
         self.completed[r.rid] = r
         self.stats.completed += 1
         finished.append(r)
+        if self.obs.enabled:
+            self.obs.tracer.finish(self.obs_tenant, r.rid, "done",
+                                   tokens=len(r.out_tokens))
         fut = self._futures.get(r.rid)
         if fut is not None and not fut.done():
             fut.set_result(r)
@@ -220,6 +254,15 @@ class ServeEngine:
         prefilled alone into its own pages), emit one token per active
         slot, recycle EOS/budget-exhausted slots, advance decode with
         per-slot positions. Returns the requests that finished."""
+        if not self.obs.enabled:
+            return self._step(params)
+        t0 = time.perf_counter()
+        finished = self._step(params)
+        self.obs.observe("engine_step_s", time.perf_counter() - t0,
+                         tenant=self.obs_tenant)
+        return finished
+
+    def _step(self, params) -> List[Request]:
         finished: List[Request] = []
         self._admit(params)
         active = [i for i in range(self.B) if self.slots[i] is not None]
@@ -236,6 +279,8 @@ class ServeEngine:
             tok = int(nxt[i])
             r.out_tokens.append(tok)
             self.stats.generated_tokens += 1
+            if self.obs.enabled:
+                self.obs.tracer.token(self.obs_tenant, r.rid)
             token[i, 0] = tok
             if tok == self.eos_id or len(r.out_tokens) >= r.max_new_tokens:
                 self._finish(i, finished)
@@ -269,6 +314,10 @@ class ServeEngine:
             params, self.kv.state, jnp.asarray(token),
             jnp.asarray(self.positions), jnp.asarray(self.kv.block_tables()))
         self._logits = np.asarray(jax.device_get(logits), np.float32)
+        if self.obs.enabled:
+            for i in remaining:
+                self.obs.tracer.event(self.obs_tenant, self.slots[i].rid,
+                                      PHASE_DECODE)
         for i in remaining:
             self.positions[i] += 1
         return finished

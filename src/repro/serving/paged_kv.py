@@ -39,7 +39,7 @@ class PagedKVCache:
 
     def __init__(self, cfg, model, batch_size: int, capacity: int,
                  page_size: int = 16, pool: Optional[SegmentPool] = None,
-                 auditor=None, enc_len: Optional[int] = None):
+                 auditor=None, enc_len: Optional[int] = None, obs=None):
         self.cfg = cfg
         self.model = model
         self.B = batch_size
@@ -52,7 +52,7 @@ class PagedKVCache:
             pool = SegmentPool(total_bytes=self.num_pages * self.page_bytes,
                                backend="bitmap",
                                segment_bytes=self.page_bytes,
-                               auditor=auditor)
+                               auditor=auditor, obs=obs)
         if pool.n_segments < self.num_pages:
             raise ValueError(
                 f"pool has {pool.n_segments} segments; paged cache needs "

@@ -33,6 +33,8 @@ def fake_vmm(tmp_path, rows=4, cols=4):
     fp._next_id = 0
     fp._lock = threading.Lock()
 
+    from repro.obs import NULL_HUB
+    vmm.obs = NULL_HUB
     vmm.policy = "hybrid"
     vmm.mmu_backend = "bitmap"
     vmm.hbm_per_chip = 1 << 24

@@ -99,3 +99,57 @@ def test_delivery_deep_event_chain_no_recursion_error():
     cq.raise_event(2, "start")
     assert count["n"] == 1000
     assert not cq.pending()
+
+
+# ===========================================================================
+# Clock discipline + concurrent transfer accounting
+# ===========================================================================
+
+
+def test_event_ts_is_monotonic_clock():
+    """Event.ts must come from time.monotonic() — schedulers and the
+    autoscaler subtract it from their own monotonic readings, so a
+    wall-clock stamp would corrupt every event-age computation the
+    moment NTP steps the clock. The wall field exists for display."""
+    import time
+
+    t0 = time.monotonic()
+    w0 = time.time()
+    cq = CompletionQueue()
+    cq.raise_event(1, "probe")
+    ev = cq.pending()[0]
+    t1 = time.monotonic()
+    w1 = time.time()
+    assert t0 <= ev.ts <= t1            # ts lives on the monotonic axis
+    assert w0 <= ev.wall <= w1          # wall lives on the wall axis
+    # ages computed against monotonic now are non-negative and tiny
+    assert 0.0 <= time.monotonic() - ev.ts < 60.0
+
+
+def test_transfer_counters_atomic_under_concurrency():
+    """N threads × M transfers each: byte counters must add up exactly
+    and stage timings must be positive — no lost read-modify-write
+    updates on the shared stats."""
+    import threading
+
+    te = TransferEngine(mode="vm_nocopy")   # nocopy: no staging lock, so
+    n_threads, n_iters = 8, 16              # transfers genuinely overlap
+    x = np.ones(1024, dtype=np.float32)
+    errs = []
+
+    def work():
+        try:
+            for _ in range(n_iters):
+                dev = te.h2d(x)
+                te.d2h(dev)
+        except Exception as exc:          # noqa: BLE001
+            errs.append(exc)
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errs
+    total = n_threads * n_iters * x.nbytes
+    assert te.stats.h2d_bytes == total
+    assert te.stats.d2h_bytes == total
+    assert te.stats.dma_ns > 0 and te.stats.d2h_ns > 0

@@ -1,0 +1,154 @@
+"""Golden stats schemas.
+
+``VMM.stats()``, ``EngineStats``, ``SegmentPool.memory_stats()``, the
+data-plane tenant snapshot, and ``ObsHub.snapshot()`` are read by the
+benchmarks, the serving driver, dashboards scraping the Prometheus
+endpoint, and the paper-figure scripts. Renaming or dropping a key is a
+silent break for all of them — these tests fail loudly instead.
+
+The golden sets pin the keys that must exist; *new* keys are allowed
+(the schema grows), removal/renames are not.
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.mmu import SegmentPool
+from repro.core.scheduler import make_data_plane
+from repro.obs import ObsHub
+from repro.serving.engine import EngineStats
+
+VMM_STATS_KEYS = {
+    "tenants", "memory", "floorplan_util", "fragmentation",
+    "compile_hits", "compile_misses", "reconfigs", "violations",
+    "transfer", "oplog_records", "ops", "scheduler", "autoscaler", "obs",
+}
+
+MEMORY_STATS_KEYS = {
+    "segments_total", "segments_in_use", "pages_in_use", "page_tables",
+    "page_faults", "pages_allocated", "pages_freed", "fragmentation",
+    "quota_denials",
+}
+
+ENGINE_STATS_FIELDS = {
+    "steps", "decode_steps", "prefills", "full_prefills", "admitted",
+    "deferred", "completed", "generated_tokens", "pages_leased",
+    "pages_freed", "page_faults",
+}
+
+PLANE_TENANT_KEYS = {
+    "submitted", "completed", "failed", "queue_depth", "wait_s",
+    "service_s", "avg_wait_ms", "avg_service_ms", "stragglers",
+    "credit", "weight", "priority",
+}
+
+SLO_TENANT_EXTRA_KEYS = {
+    "slo_wait_ms", "slo_hits", "slo_misses", "slo_attainment",
+    "p95_wait_ms", "mem_pressure", "admission_denied",
+}
+
+TRANSFER_STATS_KEYS = {
+    "h2d_bytes", "d2h_bytes", "guest_copy_ns", "dma_ns", "d2h_ns",
+}
+
+OBS_SNAPSHOT_KEYS = {"enabled", "metrics", "traces", "flight"}
+OBS_METRICS_KEYS = {"counters", "gauges", "histograms", "providers"}
+HISTOGRAM_SUMMARY_KEYS = {"count", "sum", "mean", "min", "max",
+                          "p50", "p95", "p99"}
+
+
+def _assert_keys(got: dict, want: set, what: str):
+    missing = want - set(got)
+    assert not missing, f"{what} lost keys: {sorted(missing)}"
+
+
+def test_vmm_stats_schema():
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import VMM
+
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    vmm = VMM(Mesh(devs, ("data", "model")), policy="slo",
+              ckpt_root=tempfile.mkdtemp(), obs=ObsHub(enabled=True))
+    t = vmm.create_vm("a", (1, 1))
+    t.device.open()
+    t.program = lambda x: x
+    t.device.run(np.ones(4, np.float32))
+    s = vmm.stats()
+    try:
+        _assert_keys(s, VMM_STATS_KEYS, "VMM.stats()")
+        _assert_keys(s["memory"]["a"], MEMORY_STATS_KEYS,
+                     "VMM.stats()['memory'][tenant]")
+        _assert_keys(s["transfer"], TRANSFER_STATS_KEYS,
+                     "VMM.stats()['transfer']")
+        assert s["scheduler"]["policy"] == "slo"
+        tenant = s["scheduler"]["tenants"]["a"]
+        _assert_keys(tenant, PLANE_TENANT_KEYS | SLO_TENANT_EXTRA_KEYS,
+                     "slo plane tenant snapshot")
+        # per-op latency percentiles from the OpLog (fig6b reads these)
+        assert "run" in s["ops"]
+        _assert_keys(s["ops"]["run"], {"count", "mean_ms", "p50_ms",
+                                       "p95_ms"}, "VMM.stats()['ops'][op]")
+        # the embedded telemetry tree
+        _assert_keys(s["obs"], OBS_SNAPSHOT_KEYS, "VMM.stats()['obs']")
+        assert s["obs"]["enabled"] is True
+    finally:
+        vmm.shutdown()
+
+
+def test_segment_pool_memory_stats_schema():
+    pool = SegmentPool(total_bytes=1 << 22, segment_bytes=1 << 20)
+    a = pool.alloc(1 << 20, owner="a")
+    ms = pool.memory_stats()
+    _assert_keys(ms, MEMORY_STATS_KEYS, "SegmentPool.memory_stats()")
+    assert ms["segments_in_use"] == 1
+    pool.free(a.handle, owner="a")
+
+
+def test_engine_stats_fields():
+    got = {f.name for f in dataclasses.fields(EngineStats)}
+    missing = ENGINE_STATS_FIELDS - got
+    assert not missing, f"EngineStats lost fields: {sorted(missing)}"
+
+
+@pytest.mark.parametrize("policy", ["hybrid", "wfq", "slo"])
+def test_plane_tenant_snapshot_schema(policy):
+    from repro.core.shell import CompletionQueue
+    from repro.core.tenant import Tenant
+
+    t = Tenant(name="a", vslice=None, pool=None, cq=CompletionQueue())
+    plane = make_data_plane(policy)
+    try:
+        plane.register(t)
+        plane.execute(t, "run", lambda: 1)
+        snap = plane.stats()["tenants"]["a"]
+        want = PLANE_TENANT_KEYS | (SLO_TENANT_EXTRA_KEYS
+                                    if policy == "slo" else set())
+        _assert_keys(snap, want, f"{policy} plane tenant snapshot")
+    finally:
+        plane.shutdown()
+
+
+def test_obs_snapshot_schema():
+    hub = ObsHub(enabled=True)
+    hub.count("x_total", tenant="a")
+    hub.observe("lat_s", 0.01, tenant="a")
+    hub.tracer.start("a", 0)
+    hub.tracer.finish("a", 0)
+    hub.flight.record("a", "admit", {})
+    snap = hub.snapshot()
+    _assert_keys(snap, OBS_SNAPSHOT_KEYS, "ObsHub.snapshot()")
+    _assert_keys(snap["metrics"], OBS_METRICS_KEYS,
+                 "ObsHub.snapshot()['metrics']")
+    _assert_keys(snap["metrics"]["histograms"]["lat_s"]["tenant=a"],
+                 HISTOGRAM_SUMMARY_KEYS, "histogram summary")
+    _assert_keys(snap["traces"], {"capacity", "open", "tenants", "denials"},
+                 "tracer snapshot")
+    _assert_keys(snap["flight"], {"capacity", "tenants", "dumps"},
+                 "flight snapshot")
+    roll = snap["traces"]["tenants"]["a"]
+    _assert_keys(roll, {"finished", "tokens", "decode_steps",
+                        "queue_wait_s", "ttft_s", "tokens_per_s"},
+                 "tracer tenant rollup")
