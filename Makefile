@@ -1,18 +1,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fairness bench bench-paged bench-slo bench-obs
+.PHONY: test smoke fairness bench bench-paged bench-prefill bench-slo bench-obs
 
 test:            ## tier-1 verify
 	$(PY) -m pytest -x -q
 
-smoke: test fairness bench-paged bench-slo bench-obs   ## tier-1 + quick benchmark checks
+smoke: test fairness bench-paged bench-prefill bench-slo bench-obs   ## tier-1 + quick benchmark checks
 
 fairness:        ## WFQ vs broker vs passthrough share table (quick)
 	$(PY) benchmarks/scheduler_fairness.py --quick
 
 bench-paged:     ## paged vs legacy serving: admission latency + tok/s
 	$(PY) benchmarks/paged_kv.py --quick
+
+bench-prefill:   ## chunked vs monolithic prefill: admission-tail gate
+	$(PY) benchmarks/chunked_prefill.py --quick
 
 bench-slo:       ## deadline attainment under overload: slo vs wfq/broker
 	$(PY) benchmarks/slo_attainment.py --quick

@@ -1,0 +1,187 @@
+"""Chunked vs monolithic prefill on the paged engine → BENCH_prefill.json.
+
+The admission tail this PR kills: with monolithic admission a newcomer's
+whole prompt is prefilled inside one engine step, so the step that admits
+a long prompt stalls every decoding slot behind an O(prompt) pause — the
+admission p95 is the *longest prompt*, not the common case. Chunked
+prefill (``chunk_tokens > 0``) bounds the prompt work any single step
+carries, and the fused decode step keeps existing slots emitting tokens
+on the very steps a newcomer's chunks land.
+
+Two measurements over the same long-prompt-heavy trace:
+
+* **admission step latency** (p50/p95/p99) — chunked must cut the tail;
+* **decode tok/s while a newcomer is mid-prefill** — chunked must hold
+  throughput (monolithic has no such steps: the batch is stalled
+  instead, which is the pathology).
+
+Loud regression gate (run from ``make bench-prefill`` / ``make smoke``):
+chunked admission p95 must stay under ``--admission-p95-ceiling-ms``
+(and under the monolithic p95), and mid-prefill decode throughput must
+hold ``--decode-floor-frac`` of the engine's overall decode rate.
+
+    PYTHONPATH=src python benchmarks/chunked_prefill.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def make_trace(n_requests, rng):
+    """Long-prompt-heavy churn: the workload where monolithic admission
+    steps are visibly the tail."""
+    from repro.serving.engine import Request
+    lens = [12, 160, 24, 160]               # bounded compile universe
+    trace = []
+    for i in range(n_requests):
+        plen = lens[i % len(lens)]
+        prompt = rng.integers(0, 512, size=(plen,)).astype(np.int32)
+        trace.append(Request(i, prompt, max_new_tokens=4 + (i % 3) * 3))
+    return trace
+
+
+def drive(engine, params, trace):
+    it = iter(trace)
+    engine.submit(next(it).prompt, max_new_tokens=trace[0].max_new_tokens)
+    admit_times = []
+    mid_tokens, mid_time = 0, 0.0
+    done, submitted = 0, 1
+    t_total0 = time.perf_counter()
+    while engine.has_work() or done < len(trace):
+        before = engine.stats.admitted
+        tok_before = engine.stats.generated_tokens
+        mid_before = bool((engine._cursor >= 0).any())
+        t0 = time.perf_counter()
+        finished = engine.step(params)
+        dt = time.perf_counter() - t0
+        if engine.stats.admitted > before:
+            admit_times.append(dt)
+        if mid_before or bool((engine._cursor >= 0).any()):
+            mid_time += dt
+            mid_tokens += engine.stats.generated_tokens - tok_before
+        done += len(finished)
+        for _ in range(1 + len(finished)):
+            nxt = next(it, None)
+            if nxt is not None:
+                submitted += 1
+                engine.submit(nxt.prompt,
+                              max_new_tokens=nxt.max_new_tokens)
+    total = time.perf_counter() - t_total0
+
+    def pct(q):
+        return (1e3 * float(np.percentile(admit_times, q))
+                if admit_times else 0.0)
+
+    return {
+        "total_s": total,
+        "tokens": engine.stats.generated_tokens,
+        "tok_s": engine.stats.generated_tokens / max(total, 1e-9),
+        "admission_ms_p50": pct(50),
+        "admission_ms_p95": pct(95),
+        "admission_ms_p99": pct(99),
+        "admissions_timed": len(admit_times),
+        "full_prefills": engine.stats.full_prefills,
+        "prefill_chunks": engine.stats.prefill_chunks,
+        "decode_tok_s_mid_prefill":
+            mid_tokens / mid_time if mid_time > 0 else None,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=192)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=16)
+    ap.add_argument("--admission-p95-ceiling-ms", type=float, default=230.0,
+                    help="hard ceiling on the chunked admission p95 — "
+                         "the pre-chunking admission *mean*, so the tail "
+                         "must land below where the average used to be")
+    ap.add_argument("--decode-floor-frac", type=float, default=0.5,
+                    help="mid-prefill decode tok/s must hold this "
+                         "fraction of the run's overall tok/s")
+    ap.add_argument("--out", default="BENCH_prefill.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.requests = min(args.requests, 16)
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import ServeEngine
+
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    trace = make_trace(args.requests, rng)
+
+    from repro.serving.engine import EngineStats, Request
+
+    # warmup trace: one request per distinct prompt length, so the
+    # measured pass runs against a hot jit cache (engine jit wrappers
+    # are engine-lifetime state — a fresh engine would recompile and
+    # the "tail" would be compile time, not admission latency)
+    seen, warm = set(), []
+    for r in trace:
+        if len(r.prompt) not in seen:
+            seen.add(len(r.prompt))
+            warm.append(Request(10_000 + len(warm), r.prompt,
+                                max_new_tokens=2))
+
+    results = {}
+    for name, chunk in (("monolithic", 0), ("chunked", args.chunk_tokens)):
+        eng = ServeEngine(cfg, model, args.batch, args.capacity,
+                          page_size=args.page_size, chunk_tokens=chunk)
+        drive(eng, params, warm)            # hot caches, throwaway stats
+        eng.stats = EngineStats()
+        r = drive(eng, params, trace)
+        results[name] = r
+        mid = r["decode_tok_s_mid_prefill"]
+        print(f"[prefill] {name:10s}: {r['tok_s']:7.1f} tok/s  "
+              f"admission p50 {r['admission_ms_p50']:.1f} / "
+              f"p95 {r['admission_ms_p95']:.1f} / "
+              f"p99 {r['admission_ms_p99']:.1f} ms  "
+              f"(n={r['admissions_timed']}, chunks={r['prefill_chunks']}"
+              + (f", mid-prefill decode {mid:.1f} tok/s" if mid else "")
+              + ")")
+
+    mono, chk = results["monolithic"], results["chunked"]
+    results["admission_p95_speedup"] = (
+        mono["admission_ms_p95"] / max(chk["admission_ms_p95"], 1e-9))
+    results["config"] = vars(args)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[prefill] admission p95 ×{results['admission_p95_speedup']:.2f}"
+          f" lower → {args.out}")
+
+    # ---- loud regression gate (fails the make target) -----------------
+    assert chk["full_prefills"] == 0, \
+        "chunked engine must never monolithically prefill"
+    assert chk["prefill_chunks"] > 0, "chunked engine wrote no chunks?"
+    assert chk["admission_ms_p95"] <= args.admission_p95_ceiling_ms, (
+        f"REGRESSION: chunked admission p95 "
+        f"{chk['admission_ms_p95']:.1f} ms exceeds the "
+        f"{args.admission_p95_ceiling_ms:.0f} ms ceiling")
+    assert chk["admission_ms_p95"] <= mono["admission_ms_p95"], (
+        f"REGRESSION: chunked admission p95 {chk['admission_ms_p95']:.1f}"
+        f" ms above monolithic {mono['admission_ms_p95']:.1f} ms — "
+        f"chunking no longer kills the tail")
+    floor = args.decode_floor_frac * chk["tok_s"]
+    assert chk["decode_tok_s_mid_prefill"] is not None \
+        and chk["decode_tok_s_mid_prefill"] >= floor, (
+        f"REGRESSION: decode throughput mid-prefill "
+        f"{chk['decode_tok_s_mid_prefill']} tok/s under the "
+        f"{floor:.1f} tok/s floor")
+    print("[prefill] regression gate passed: tail under ceiling, "
+          "decode floor held")
+
+
+if __name__ == "__main__":
+    main()

@@ -141,52 +141,75 @@ def make_trace(n_requests, rng):
     return trace
 
 
-def drive(engine, params, trace, submit, admitted_count):
-    """Trickle the trace in mid-decode; time every step and label the
-    steps that performed an admission."""
+def drive(engine, params, trace, submit, admitted_count,
+          tokens_count=None, mid_prefill=None):
+    """Trickle the trace in mid-decode; time every step, label the
+    steps that performed an admission, and (when a ``mid_prefill``
+    probe is given) separately account decode throughput on steps where
+    some slot was mid-chunked-prefill — the number the fused step must
+    hold while a newcomer streams in."""
     it = iter(trace)
     first = next(it)
     submit(engine, first)
     step_times, admit_times = [], []
+    mid_tokens, mid_time = 0, 0.0
     done = 0
     t_total0 = time.perf_counter()
     while engine.has_work() or done < len(trace):
         before = admitted_count(engine)
+        tok_before = tokens_count(engine) if tokens_count else 0
+        mid_before = mid_prefill(engine) if mid_prefill else False
         t0 = time.perf_counter()
         finished = engine.step(params)
         dt = time.perf_counter() - t0
         step_times.append(dt)
         if admitted_count(engine) > before:
             admit_times.append(dt)
+        if mid_prefill and (mid_before or mid_prefill(engine)):
+            mid_time += dt
+            mid_tokens += tokens_count(engine) - tok_before
         done += len(finished)
         for _ in range(1 + len(finished)):
             nxt = next(it, None)
             if nxt is not None:
                 submit(engine, nxt)
     total = time.perf_counter() - t_total0
+
+    def pct(q):
+        return (1e3 * float(np.percentile(admit_times, q))
+                if admit_times else 0.0)
+
     return {
         "total_s": total,
         "steps": len(step_times),
         "admission_ms_mean":
             1e3 * float(np.mean(admit_times)) if admit_times else 0.0,
-        "admission_ms_p95":
-            1e3 * float(np.percentile(admit_times, 95))
-            if admit_times else 0.0,
+        "admission_ms_p50": pct(50),
+        "admission_ms_p95": pct(95),
+        "admission_ms_p99": pct(99),
         "admissions_timed": len(admit_times),
+        "decode_tok_s_mid_prefill":
+            mid_tokens / mid_time if mid_time > 0 else None,
+        "mid_prefill_steps_s": mid_time,
     }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--requests", type=int, default=24)
+    # ≥ 24 requests → ≥ ~23 timed admissions: a p95/p99 over 9 samples
+    # (the old default) is one outlier's vote, not a tail
+    ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=96)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="chunked-prefill budget for the paged engine "
+                         "(0 = monolithic admission)")
     ap.add_argument("--out", default="BENCH_paged_kv.json")
     args = ap.parse_args()
     if args.quick:
-        args.requests = min(args.requests, 10)
+        args.requests = min(args.requests, 24)
 
     from repro.configs import get_config
     from repro.models import build_model
@@ -200,18 +223,34 @@ def main():
 
     results = {}
 
+    from repro.serving.engine import EngineStats
+
+    def copies(reqs):
+        return [type(r)(r.rid, r.prompt, r.max_new_tokens) for r in reqs]
+
     def run_paged():
         eng = ServeEngine(cfg, model, args.batch, args.capacity,
-                          page_size=args.page_size)
+                          page_size=args.page_size,
+                          chunk_tokens=args.chunk_tokens)
 
         def submit(e, r):
             e.submit(r.prompt, max_new_tokens=r.max_new_tokens)
-        out = drive(eng, params, [  # fresh Request copies per run
-            type(r)(r.rid, r.prompt, r.max_new_tokens) for r in trace],
-            submit, lambda e: e.stats.admitted)
+        # warmup on the SAME engine — jit wrappers are engine-lifetime
+        # state, so a fresh engine would recompile and the measured
+        # "admission tail" would be compile time, not admission latency
+        drive(eng, params, copies(trace), submit,
+              lambda e: e.stats.admitted)
+        eng.stats = EngineStats()
+        pf0 = eng.kv.pool.stats.page_faults
+        out = drive(eng, params, copies(trace),
+                    submit, lambda e: e.stats.admitted,
+                    tokens_count=lambda e: e.stats.generated_tokens,
+                    mid_prefill=(lambda e: bool((e._cursor >= 0).any()))
+                    if args.chunk_tokens else None)
         out["tokens"] = eng.stats.generated_tokens
         out["full_prefills"] = eng.stats.full_prefills
-        out["page_faults"] = eng.kv.pool.stats.page_faults
+        out["prefill_chunks"] = eng.stats.prefill_chunks
+        out["page_faults"] = eng.kv.pool.stats.page_faults - pf0
         out["pages_leased"] = eng.stats.pages_leased
         return out
 
@@ -220,6 +259,10 @@ def main():
 
         def submit(e, r):
             e.submit(type(r)(r.rid, r.prompt, r.max_new_tokens))
+        drive(eng, params, trace, submit,
+              lambda e: e.full_prefills)       # warmup, same engine
+        eng.full_prefills = eng.steps = eng.generated = 0
+        eng.completed = {}
         out = drive(eng, params, trace, submit,
                     lambda e: e.full_prefills)
         out["tokens"] = eng.generated
@@ -227,16 +270,19 @@ def main():
         return out
 
     for name, fn in (("paged", run_paged), ("legacy", run_legacy)):
-        # warmup pass populates the jit caches so the measured pass
-        # compares steady-state step latency, not compile time
-        fn()
         r = fn()
         r["tok_s"] = r["tokens"] / max(r["total_s"], 1e-9)
         results[name] = r
+        mid = r.get("decode_tok_s_mid_prefill")
         print(f"[paged_kv] {name:6s}: {r['tok_s']:8.1f} tok/s  "
               f"admission {r['admission_ms_mean']:.2f} ms mean / "
-              f"{r['admission_ms_p95']:.2f} ms p95  "
-              f"(full_prefills={r['full_prefills']})")
+              f"p50 {r['admission_ms_p50']:.2f} / "
+              f"p95 {r['admission_ms_p95']:.2f} / "
+              f"p99 {r['admission_ms_p99']:.2f} ms  "
+              f"(n={r['admissions_timed']}, "
+              f"full_prefills={r['full_prefills']}"
+              + (f", mid-prefill decode {mid:.1f} tok/s" if mid else "")
+              + ")")
 
     results["admission_speedup"] = (
         results["legacy"]["admission_ms_mean"]
@@ -245,7 +291,8 @@ def main():
         results["paged"]["tok_s"] / max(results["legacy"]["tok_s"], 1e-9))
     results["config"] = {"requests": args.requests, "batch": args.batch,
                          "capacity": args.capacity,
-                         "page_size": args.page_size}
+                         "page_size": args.page_size,
+                         "chunk_tokens": args.chunk_tokens}
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
     print(f"[paged_kv] admission speedup ×{results['admission_speedup']:.2f}"

@@ -4,12 +4,21 @@ launch/dryrun.py) and renders §Roofline for EXPERIMENTS.md.
 One row per (arch × shape × mesh): the three terms in seconds, the
 dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, per-device
 memory, and a one-line "what would move the dominant term" note.
+
+Run directly, it rooflines the serving hot-path *kernels* instead —
+``paged_decode_attention``, the fused attention+new-token pass, and the
+on-device sampler — against their XLA fallbacks, and emits
+BENCH_roofline.json::
+
+    PYTHONPATH=src python benchmarks/roofline.py --quick
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import time
 
 NOTES = {
     ("moe", "compute_s"): "shard_map EP dispatch (kills replicated "
@@ -73,3 +82,134 @@ def run():
                     f"dom={t['dominant'][:-2]},useful="
                     f"{a['model_flops']['useful_ratio']:.3f}"))
     return out
+
+
+# ===========================================================================
+# Kernel roofline: the paged / fused serving hot path → BENCH_roofline.json
+# ===========================================================================
+
+
+def _timeit(fn, iters):
+    import jax
+    jax.block_until_ready(fn())                # compile outside the clock
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _attn_accounting(B, Hq, Hkv, hd, S, fused):
+    """Bytes moved / useful FLOPs of one paged decode-attention sweep
+    (fp32 pools; every page the block table names is touched — the
+    length mask saves compute, not DMA, in the kernel's grid)."""
+    f = 4                                       # fp32 bytes
+    bytes_ = (B * S * Hkv * hd * f * 2          # k/v pages
+              + B * Hq * hd * f * 2             # q in, o out
+              + (B * Hkv * hd * f * 2 if fused else 0))   # k_new/v_new
+    flops = 2 * B * Hq * S * hd * 2 + 5 * B * Hq * S      # qk, pv, softmax
+    return bytes_, flops
+
+
+def kernel_roofline(quick=False, out_path="BENCH_roofline.json"):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention.decode_attention import (
+        fused_paged_decode_attention, paged_decode_attention, sample_tokens)
+    from repro.kernels.decode_attention.ops import (
+        fused_paged_attention_xla, sample_tokens_xla)
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+
+    # serving-shaped decode step (kernel layout q (B,Hq,1,hd))
+    B, Hq, Hkv, hd, ps = 4, 8, 2, 64, 16
+    nb = 4 if quick else 16
+    S, V = nb * ps, 2048
+    iters = 3 if quick else 10
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
+    q = jax.random.normal(ks[0], (B, Hq, 1, hd), jnp.float32)
+    kn = jax.random.normal(ks[1], (B, Hkv, 1, hd), jnp.float32)
+    vn = jax.random.normal(ks[2], (B, Hkv, 1, hd), jnp.float32)
+    kp = jax.random.normal(ks[3], (B * nb, ps, Hkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[4], (B * nb, ps, Hkv, hd), jnp.float32)
+    bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    lens = jnp.full((B,), S - 3, jnp.int32)
+    logits = jax.random.normal(ks[5], (B, V), jnp.float32)
+    noise = jax.random.gumbel(ks[6], (B, V), jnp.float32)
+    temps = jnp.asarray([0.0, 0.7, 1.0, 0.0], jnp.float32)
+
+    interpret = jax.default_backend() != "tpu"
+    ref_j = jax.jit(lambda: paged_decode_attention_ref(q, kp, vp, lens, bt))
+    fused_xla_j = jax.jit(lambda: fused_paged_attention_xla(
+        q, kn, vn, kp, vp, lens, bt))
+    sample_xla_j = jax.jit(lambda: sample_tokens_xla(logits, temps, noise))
+    cases = [
+        ("paged_decode_attention[pallas]", False,
+         lambda: paged_decode_attention(q, kp, vp, lens, bt,
+                                        interpret=interpret)),
+        ("fused_decode_step[pallas]", True,
+         lambda: fused_paged_decode_attention(
+             q, kn, vn, kp, vp, lens, bt, interpret=interpret)),
+        ("paged_decode_attention[xla]", False, ref_j),
+        ("fused_decode_step[xla]", True, fused_xla_j),
+    ]
+    rows = []
+    for name, fused, fn in cases:
+        t = _timeit(fn, iters)
+        bytes_, flops = _attn_accounting(B, Hq, Hkv, hd, S, fused)
+        rows.append({
+            "kernel": name, "time_us": 1e6 * t,
+            "bytes": bytes_, "flops": flops,
+            "arith_intensity": flops / bytes_,
+            "gbps": bytes_ / t / 1e9, "gflops": flops / t / 1e9,
+        })
+    sample_bytes = B * V * 4 * 2 + B * 4
+    sample_flops = 3 * B * V
+    for name, fn in (
+            ("sample_tokens[pallas]",
+             lambda: sample_tokens(logits, temps, noise,
+                                   interpret=interpret)),
+            ("sample_tokens[xla]", sample_xla_j)):
+        t = _timeit(fn, iters)
+        rows.append({
+            "kernel": name, "time_us": 1e6 * t,
+            "bytes": sample_bytes, "flops": sample_flops,
+            "arith_intensity": sample_flops / sample_bytes,
+            "gbps": sample_bytes / t / 1e9,
+            "gflops": sample_flops / t / 1e9,
+        })
+
+    # what fusion saves the *engine*: on-device sampling ships (B,) ids
+    # instead of the (B, V) logits the legacy step device_get's
+    host_bytes = {"legacy_logits_roundtrip": B * V * 4,
+                  "fused_token_ids": B * 4}
+    result = {
+        "shape": {"B": B, "Hq": Hq, "Hkv": Hkv, "hd": hd,
+                  "page_size": ps, "n_blocks": nb, "S": S, "V": V},
+        "backend": jax.default_backend(),
+        "pallas_interpret": interpret,
+        "iters": iters,
+        "kernels": rows,
+        "host_transfer_bytes_per_step": host_bytes,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    for r in rows:
+        print(f"[roofline] {r['kernel']:32s} {r['time_us']:10.1f} us  "
+              f"AI {r['arith_intensity']:5.2f}  "
+              f"{r['gbps']:8.3f} GB/s  {r['gflops']:8.3f} GFLOP/s")
+    print(f"[roofline] host transfer/step: legacy "
+          f"{host_bytes['legacy_logits_roundtrip']} B → fused "
+          f"{host_bytes['fused_token_ids']} B → {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_roofline.json")
+    args = ap.parse_args()
+    kernel_roofline(quick=args.quick, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,22 @@ Two cache layouts share the online-softmax body:
   block-table entries) mask to -inf and contribute nothing.
   ``page_size`` should be a multiple of the 128-lane tile on real TPU;
   small pages are fine in interpret mode.
+
+Fused serving-step kernels (PR 7):
+
+* ``fused_paged_decode_attention`` — the paged sweep with the *new*
+  token's K/V fused in-register: the freshly projected (B, Hkv, 1, hd)
+  K/V rides in VMEM and is substituted for pool row ``lengths-1`` during
+  the sweep, so decode attention no longer serializes behind the HBM
+  scatter that persists it (the scatter still runs, concurrently, to
+  keep the pool current for the *next* step — but this step never reads
+  the page it just wrote).
+* ``sample_tokens`` — on-device argmax/Gumbel-max sampling over the
+  final logits. ``argmax(logits + g·T)`` with Gumbel noise ``g`` equals
+  softmax sampling at temperature ``T`` and degrades to greedy argmax at
+  ``T = 0``, so one kernel covers both and only (B,) token ids ever
+  leave the device (the old ``_sample`` round-tripped (B, V) logits to
+  host every step).
 """
 from __future__ import annotations
 
@@ -203,3 +219,179 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables, *,
         interpret=interpret,
     )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
       q, k_pages, v_pages)
+
+
+# ===========================================================================
+# Fused serving step: new-token KV in-register + paged sweep
+# ===========================================================================
+
+
+def _fused_kernel(len_ref, bt_ref, q_ref, kn_ref, vn_ref, k_ref, v_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, scale, ps, nb, window,
+                  hq):
+    g = pl.program_id(0)                              # b * Hq + h
+    j = pl.program_id(1)                              # logical block index
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # (1, hd)
+    k = k_ref[0, :, 0]                                # (ps, hd)
+    v = v_ref[0, :, 0]
+    kn = kn_ref[0, 0]                                 # (1, hd) new token
+    vn = vn_ref[0, 0]
+    length = len_ref[g // hq]                         # includes new token
+    tok = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    # the new token lives at logical index length-1 but is NOT in the
+    # pool yet — substitute its VMEM-resident row into the sweep
+    is_new = (tok == length - 1).reshape(ps, 1)
+    k_eff = jnp.where(is_new, kn, k)
+    v_eff = jnp.where(is_new, vn, v)
+    s = jax.lax.dot_general(q, k_eff, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = tok < length
+    if window > 0:
+        valid &= tok >= length - window
+    s = jnp.where(valid, s, _NEG)
+    m_prev = m_ref[:1, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_eff.dtype), v_eff, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:1, :1], 1e-30)).astype(
+                           o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def fused_paged_decode_attention(q, k_new, v_new, k_pages, v_pages,
+                                 lengths, block_tables, *, window=0,
+                                 interpret=False):
+    """Paged decode attention with the new token's K/V fused in-register.
+
+    q: (B,Hq,1,hd); k_new/v_new: (B,Hkv,1,hd) the step's freshly
+    projected (roped) K/V, logically at index ``lengths-1``; k/v pages:
+    (P, page_size, Hkv, hd) shared pool NOT yet containing the new
+    token; lengths: (B,) int32 valid counts *including* the new token
+    (0 = dead slot → zero output, its k_new/v_new ignored);
+    block_tables: (B, nb) int32. The caller persists k_new/v_new to the
+    pool separately — this kernel never reads the page being written.
+    """
+    B, Hq, _, hd = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    nb = block_tables.shape[1]
+    grid = (B * Hq, nb)
+
+    kernel = functools.partial(_fused_kernel, scale=hd ** -0.5, ps=ps,
+                               nb=nb, window=window, hq=Hq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda g, j, lens, bt: (g // Hq, g % Hq, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda g, j, lens, bt:
+                         (g // Hq, (g % Hq) // G, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda g, j, lens, bt:
+                         (g // Hq, (g % Hq) // G, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda g, j, lens, bt:
+                         (bt[g // Hq, j], 0, (g % Hq) // G, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda g, j, lens, bt:
+                         (bt[g // Hq, j], 0, (g % Hq) // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda g, j, lens, bt:
+                               (g // Hq, g % Hq, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q, k_new, v_new, k_pages, v_pages)
+
+
+# ===========================================================================
+# On-device sampling: argmax / Gumbel-max over the final logits
+# ===========================================================================
+
+
+def _sample_kernel(temp_ref, s_ref, n_ref, tok_ref, m_ref, i_ref, *,
+                   bv, nv):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    # argmax(logits + g·T): Gumbel-max softmax sampling at temperature T
+    # (argmax is scale-invariant: argmax(l/T + g) == argmax(l + g·T)),
+    # greedy argmax at T = 0 — one formula for both
+    s = s_ref[0] + n_ref[0] * temp_ref[b]             # (1, bv)
+    bmax = s.max(axis=-1, keepdims=True)              # (1, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, bv), 1)
+    # first column attaining the block max (matches np.argmax ties)
+    bidx = jnp.min(jnp.where(s == bmax, col, bv),
+                   axis=-1, keepdims=True) + j * bv
+    better = bmax > m_ref[...]                        # strict: keep first
+    m_ref[...] = jnp.where(better, bmax, m_ref[...])
+    i_ref[...] = jnp.where(better, bidx, i_ref[...])
+
+    @pl.when(j == nv - 1)
+    def _flush():
+        tok_ref[...] = i_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bv"))
+def sample_tokens(logits, temps, noise, *, interpret=False, bv=None):
+    """logits (B, V) fp32; temps (B,) fp32 (0 = greedy); noise (B, V)
+    Gumbel draws (ignored where temps == 0). → (B,) int32 token ids."""
+    B, V = logits.shape
+    if bv is None:
+        bv = min(V, 2048)
+    while V % bv:
+        bv //= 2
+    nv = V // bv
+    grid = (B, nv)
+    kernel = functools.partial(_sample_kernel, bv=bv, nv=nv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bv), lambda b, j, t: (b, j)),
+            pl.BlockSpec((1, bv), lambda b, j, t: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, j, t: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(temps.astype(jnp.float32), logits.astype(jnp.float32),
+      noise.astype(jnp.float32))
+    return out[:, 0]

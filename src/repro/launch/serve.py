@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked prefill budget per engine step (0 = "
+                         "monolithic admission); also switches decode to "
+                         "the fused attention+sampling step")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--virtualized", action="store_true")
     ap.add_argument("--policy", default="hybrid",
@@ -105,11 +109,13 @@ def main():
                              prefill_wrap=mediate, decode_wrap=mediate,
                              admission_gate=pool_pressure_gate(tenant.pool),
                              extra_batch=extra, obs=obs,
-                             obs_tenant="server")
+                             obs_tenant="server",
+                             chunk_tokens=args.chunk_tokens)
     else:
         engine = ServeEngine(cfg, model, args.batch, cap,
                              page_size=args.page_size, extra_batch=extra,
-                             obs=obs, obs_tenant="server")
+                             obs=obs, obs_tenant="server",
+                             chunk_tokens=args.chunk_tokens)
 
     for i in range(args.requests):
         plen = args.prompt_len + int(rng.integers(0, 8))
@@ -134,7 +140,8 @@ def main():
     print(f"[serve] {done} requests, {new_tokens} tokens in {dt:.2f}s "
           f"({new_tokens / max(dt, 1e-9):.1f} tok/s)")
     print(f"[serve] engine: {s.steps} steps, {s.prefills} newcomer "
-          f"prefills (full={s.full_prefills}), {s.page_faults} page "
+          f"prefills (full={s.full_prefills}, "
+          f"chunks={s.prefill_chunks}), {s.page_faults} page "
           f"faults, {s.pages_leased} pages leased / {s.pages_freed} freed, "
           f"{s.deferred} deferred")
     print(f"[serve] kv memory: {engine.kv.memory_stats()}")

@@ -373,9 +373,13 @@ def attn_decode_paged(cfg, p, x1, pools, positions, block_tables, *,
     lengths = jnp.maximum(positions + 1, 0)          # dead slot → 0
 
     if cfg.use_pallas:
-        from repro.kernels.decode_attention.ops import decode_attention_op
-        o = decode_attention_op(q, ck, cv, lengths, window=window,
-                                block_tables=block_tables)
+        # fused step: the new token's K/V ride in VMEM and are
+        # substituted in-register at index lengths-1, so the sweep reads
+        # the *pre-scatter* pools and never waits on the persist-scatter
+        # above (which still runs, for the next step)
+        from repro.kernels.decode_attention.ops import fused_decode_step_op
+        o = fused_decode_step_op(q, k, v, pools["k"], pools["v"], lengths,
+                                 block_tables, window=window)
         return _out_proj(cfg, p, o), {"k": ck, "v": cv}
 
     # XLA fallback: gather the slot's pages, grouped-GQA single-token
@@ -399,6 +403,40 @@ def attn_decode_paged(cfg, p, x1, pools, positions, block_tables, *,
     o = jnp.einsum("bhgk,bkhd->bhgd", pr.astype(vb.dtype), vb)
     y = _out_proj(cfg, p, o.reshape(B, 1, Hq, hd))
     return y, {"k": ck, "v": cv}
+
+
+def attn_prefill_chunk_paged(cfg, p, x, pools, positions, block_row, *,
+                             window=0):
+    """One slot's prompt *chunk* against its leased pages (chunked
+    prefill: the engine interleaves these bounded writes with decode
+    steps so a newcomer never stalls the batch).
+
+    x (1, L, D) chunk of the prompt; positions (L,) absolute token
+    indices [start, start+L); block_row (nb,) the slot's logical block →
+    physical page map; pools as in :func:`attn_decode_paged`.
+
+    The chunk's K/V are scattered into the pool, then the chunk attends
+    causally over tokens [0, start+L): earlier chunks' tokens are
+    gathered from the pool, and any stale data at k_pos > start+L-1
+    (pages leased but not yet written, or recycled from a freed slot)
+    is provably masked by causality. Returns (y (1, L, D), pools').
+    """
+    _, ps, Hkv, hd = pools["k"].shape
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    pages = block_row[positions // ps]
+    offs = positions % ps
+    ck = pools["k"].at[pages, offs].set(k[0])
+    cv = pools["v"].at[pages, offs].set(v[0])
+    nb = block_row.shape[0]
+    S = nb * ps
+    kb = ck[block_row].reshape(1, S, Hkv, hd)
+    vb = cv[block_row].reshape(1, S, Hkv, hd)
+    y = attention_core(q, kb, vb, causal=True, window=window,
+                       q_pos=positions, k_pos=jnp.arange(S))
+    return _out_proj(cfg, p, y), {"k": ck, "v": cv}
 
 
 def _cache_seq_axes(mesh, B, Hkv):

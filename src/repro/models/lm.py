@@ -261,6 +261,62 @@ def apply_layer_decode(cfg, spec, p, x, cache, ctx):
     return x + y2.astype(x.dtype), new_cache
 
 
+def apply_layer_chunk(cfg, spec, p, x, cache, ctx):
+    """One slot's prompt *chunk* through the paged state (chunked
+    prefill). x (1, L, D); attn/swa leaves are shared page pools
+    (written via the slot's ``block_row``), everything else lives in
+    per-slot batch rows — the slot's row is sliced out as the initial
+    state and the final state written back, so no other slot is
+    touched. Returns (x', cache')."""
+    slot = ctx["slot"]
+
+    def row(leaf):
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=0)
+
+    def put(old, new):
+        return jax.lax.dynamic_update_slice_in_dim(old, new.astype(
+            old.dtype), slot, axis=0)
+
+    h = apply_norm(cfg, p["norm1"], x)
+    new_cache = dict(cache)
+    if spec.mixer in ("attn", "swa"):
+        window = cfg.window if spec.mixer == "swa" else 0
+        y, new_cache["mixer"] = attn.attn_prefill_chunk_paged(
+            cfg, p["mixer"], h, cache["mixer"], ctx["positions"],
+            ctx["block_row"], window=window)
+    elif spec.mixer == "rglru":
+        y, mc = rec.rglru_full(
+            cfg, p["mixer"], h, h0=row(cache["mixer"]["h"]),
+            conv0=row(cache["mixer"]["conv"]), make_cache=True)
+        new_cache["mixer"] = {k: put(cache["mixer"][k], mc[k])
+                              for k in cache["mixer"]}
+    else:  # rwkv
+        c0 = {k: row(v) for k, v in cache["mixer"].items()}
+        y, mc = rec.rwkv_tmix_full(cfg, p["mixer"], h, cache=c0,
+                                   make_cache=True)
+        new_cache["mixer"] = {k: put(cache["mixer"][k], mc[k])
+                              for k in cache["mixer"]}
+    x = x + y.astype(x.dtype)
+
+    if spec.cross:
+        raise NotImplementedError(
+            "chunked prefill: enc-dec cross attention (whisper prefills "
+            "monolithically)")
+
+    h2 = apply_norm(cfg, p["norm2"], x)
+    if spec.ffn == "moe":
+        y2, _ = moe_mod.apply_moe(cfg, p["ffn"], h2, mesh=ctx.get("mesh"))
+    elif spec.ffn == "channelmix":
+        c0 = {k: row(v) for k, v in cache["ffn"].items()}
+        y2, fc = rec.channelmix_full(cfg, p["ffn"], h2, cache=c0,
+                                     make_cache=True)
+        new_cache["ffn"] = {k: put(cache["ffn"][k], fc[k])
+                            for k in cache["ffn"]}
+    else:
+        y2 = apply_ffn(cfg, p["ffn"], h2, kind=spec.ffn)
+    return x + y2.astype(x.dtype), new_cache
+
+
 # ---------------------------------------------------------------------------
 # Stack init / apply over the segment layout
 # ---------------------------------------------------------------------------
@@ -457,3 +513,35 @@ def apply_stack_decode(cfg, specs, segs, x, caches, ctx):
             x, ys = jax.lax.scan(body, x, (seg_params, seg_cache))
             new_caches.append(ys)
     return x, new_caches
+
+
+def apply_stack_chunk(cfg, specs, segs, x, state, ctx):
+    """One slot's prompt chunk through the paged state. Returns
+    (x, state'). Mirrors ``apply_stack_decode``'s segment walk."""
+    layout = build_layout(cfg, specs)
+    new_state = []
+    for si, entry in enumerate(layout):
+        seg_params = segs[si]
+        seg_state = state[si]
+        if entry[0] == "unroll":
+            ncs = []
+            for li, spec in enumerate(entry[1]):
+                x, nc = apply_layer_chunk(
+                    cfg, spec, seg_params[li], x, seg_state[li], ctx)
+                ncs.append(nc)
+            new_state.append(ncs)
+        else:
+            _, period, n = entry
+
+            def body(xx, xs, period=period):
+                p_i, c_i = xs
+                ncs = []
+                for li, spec in enumerate(period):
+                    xx, nc = apply_layer_chunk(
+                        cfg, spec, p_i[li], xx, c_i[li], ctx)
+                    ncs.append(nc)
+                return xx, ncs
+
+            x, ys = jax.lax.scan(body, x, (seg_params, seg_state))
+            new_state.append(ys)
+    return x, new_state

@@ -220,6 +220,64 @@ class Model:
                                          params["segments"], x, state, ctx)
         return self._lm_logits(params, x[:, -1:])[:, 0], state
 
+    def prefill_chunk_paged(self, params, state, tokens, slot, block_row,
+                            start):
+        """Chunked prefill: one slot's prompt chunk against the paged
+        state (the engine interleaves these with decode steps so a
+        newcomer never stalls the batch).
+
+        tokens (1, L) int32 chunk of the prompt; slot () int32 batch
+        row; block_row (nb,) int32 the slot's block table; start ()
+        int32 absolute position of ``tokens[0]``. → (logits (1, V) of
+        the chunk's last token, state'). jit specializes on L — the
+        engine quantizes chunk lengths so the compile universe stays
+        small."""
+        cfg = self.cfg
+        if cfg.family == "vlm" or cfg.is_encdec:
+            raise NotImplementedError(
+                "chunked prefill: vlm/enc-dec frontends prefill "
+                "monolithically")
+        x = self._embed_tokens(params, tokens)
+        positions = start + jnp.arange(tokens.shape[1])
+        if not cfg.use_rope:
+            x = x + abs_position_vector(positions, cfg.d_model)[None] \
+                .astype(x.dtype)
+        ctx = {"mode": "chunk", "positions": positions, "slot": slot,
+               "block_row": block_row, "mesh": self.mesh}
+        x, state = lm.apply_stack_chunk(cfg, self.specs,
+                                        params["segments"], x, state, ctx)
+        return self._lm_logits(params, x[:, -1:])[:, 0], state
+
+    def decode_paged_fused(self, params, state, token, positions,
+                           block_tables, temps, step):
+        """Fused decode step: paged attention (Pallas path keeps the new
+        token's K/V in-register) + on-device argmax/Gumbel sampling —
+        only (B,) token ids leave the device, not (B, V) logits.
+
+        temps (B,) fp32 per-slot temperatures (0 = greedy); step ()
+        int32 folds into the sampling key. → (tokens (B,) int32,
+        state')."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, token)
+        if not cfg.use_rope:
+            pvec = jnp.clip(positions, 0, None)
+            x = x + abs_position_vector(pvec, cfg.d_model)[:, None, :] \
+                .astype(x.dtype)
+        ctx = {"mode": "decode", "pos": positions, "positions": positions,
+               "block_tables": block_tables, "mesh": self.mesh}
+        x, state = lm.apply_stack_decode(cfg, self.specs,
+                                         params["segments"], x, state, ctx)
+        logits = self._lm_logits(params, x[:, -1:])[:, 0]
+        key = jax.random.fold_in(jax.random.PRNGKey(0x5e), step)
+        noise = jax.random.gumbel(key, logits.shape, jnp.float32)
+        if cfg.use_pallas:
+            from repro.kernels.decode_attention.ops import sample_tokens_op
+            toks = sample_tokens_op(logits, temps, noise)
+        else:
+            from repro.kernels.decode_attention.ops import sample_tokens_xla
+            toks = sample_tokens_xla(logits, temps, noise)
+        return toks, state
+
     def kv_page_bytes(self, page_size) -> int:
         """HBM bytes one KV page spans across all attn/swa layers — the
         MMU lease granularity for the paged cache."""

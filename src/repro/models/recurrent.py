@@ -122,10 +122,16 @@ def rglru_full(cfg, p, x, h0=None, conv0=None, make_cache=False):
     y = jnp.dot((gb.astype(jnp.float32) * h).astype(cd), p["w_o"].astype(cd))
     cache = None
     if make_cache:
-        cache = {"h": h[:, -1],
-                 "conv": xb[:, S - (RG_CONV_WIDTH - 1):].astype(cd)
-                 if S >= RG_CONV_WIDTH - 1 else
-                 jnp.pad(xb, ((0, 0), (RG_CONV_WIDTH - 1 - S, 0), (0, 0)))}
+        if conv0 is not None:
+            # xb_ext = [conv history | chunk] — its tail is correct even
+            # when the chunk is shorter than the conv window (chunked
+            # prefill's last chunk can be a single token)
+            conv = xb_ext[:, -(RG_CONV_WIDTH - 1):].astype(cd)
+        elif S >= RG_CONV_WIDTH - 1:
+            conv = xb[:, S - (RG_CONV_WIDTH - 1):].astype(cd)
+        else:
+            conv = jnp.pad(xb, ((0, 0), (RG_CONV_WIDTH - 1 - S, 0), (0, 0)))
+        cache = {"h": h[:, -1], "conv": conv}
     return y, cache
 
 

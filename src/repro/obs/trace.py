@@ -34,6 +34,7 @@ from typing import Dict, List, Optional
 PHASE_QUEUED = "queued"
 PHASE_ADMITTED = "admitted"
 PHASE_PREFILL = "prefill"
+PHASE_PREFILL_CHUNK = "prefill_chunk"
 PHASE_DECODE = "decode"
 PHASE_DONE = "done"
 PHASE_DEFERRED = "deferred"
@@ -61,9 +62,12 @@ class Span:
     status: Optional[str] = None           # done | denied | None=open
     n_decode_steps: int = 0
     n_tokens: int = 0
+    n_prefill_chunks: int = 0
     # phase timestamps (monotonic), filled as the request advances
     t_queued: Optional[float] = None
     t_admitted: Optional[float] = None
+    t_prefill_start: Optional[float] = None
+    t_prefill_done: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
 
@@ -87,6 +91,17 @@ class Span:
         return self.t_first_token - self.t_queued
 
     @property
+    def prefill_s(self) -> Optional[float]:
+        """Admission → last prompt token written. Chunked prefills span
+        many engine steps; without this the whole wait would be
+        misattributed to the first decode."""
+        end = self.t_prefill_done
+        start = self.t_prefill_start or self.t_admitted
+        if start is None or end is None:
+            return None
+        return end - start
+
+    @property
     def tokens_per_s(self) -> Optional[float]:
         if (self.t_admitted is None or self.t_done is None
                 or self.n_tokens == 0):
@@ -104,7 +119,9 @@ class Span:
             "status": self.status,
             "n_decode_steps": self.n_decode_steps,
             "n_tokens": self.n_tokens,
+            "n_prefill_chunks": self.n_prefill_chunks,
             "queue_wait_s": self.queue_wait_s,
+            "prefill_s": self.prefill_s,
             "ttft_s": self.ttft_s,
             "tokens_per_s": self.tokens_per_s,
             "dropped_events": self.dropped_events,
@@ -148,6 +165,12 @@ class RequestTracer:
             span._add(phase, now, detail)
             if phase == PHASE_ADMITTED:
                 span.t_admitted = now
+            elif phase == PHASE_PREFILL_CHUNK:
+                span.n_prefill_chunks += 1
+                if span.t_prefill_start is None:
+                    span.t_prefill_start = now
+            elif phase == PHASE_PREFILL:
+                span.t_prefill_done = now
             elif phase == PHASE_DECODE:
                 span.n_decode_steps += 1
             elif phase in (PHASE_DEFERRED, PHASE_DENIED):
@@ -187,6 +210,9 @@ class RequestTracer:
             if span.queue_wait_s is not None:
                 r.histogram("serve_queue_wait_s",
                             tenant=tenant).observe(span.queue_wait_s)
+            if span.prefill_s is not None:
+                r.histogram("serve_prefill_s",
+                            tenant=tenant).observe(span.prefill_s)
             if span.ttft_s is not None:
                 r.histogram("serve_ttft_s",
                             tenant=tenant).observe(span.ttft_s)

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core.mmu import MMUError
 from repro.obs import (NULL_HUB, PHASE_ADMITTED, PHASE_DECODE,
-                       PHASE_DEFERRED, PHASE_PREFILL)
+                       PHASE_DEFERRED, PHASE_PREFILL, PHASE_PREFILL_CHUNK)
 from repro.serving.paged_kv import PagedKVCache
 
 
@@ -62,6 +62,7 @@ class EngineStats:
     steps: int = 0
     decode_steps: int = 0
     prefills: int = 0                   # one per admitted newcomer
+    prefill_chunks: int = 0             # chunked-prefill chunk count
     full_prefills: int = 0              # paged engine: must stay 0
     admitted: int = 0
     deferred: int = 0                   # admissions bounced by the MMU
@@ -83,13 +84,23 @@ class ServeEngine:
                  decode_wrap: Optional[Callable] = None,
                  extra_batch: Optional[dict] = None, eos_id: int = -1,
                  admission_gate: Optional[Callable] = None,
-                 seed: int = 0, obs=None, obs_tenant: str = "serve"):
+                 seed: int = 0, obs=None, obs_tenant: str = "serve",
+                 chunk_tokens: int = 0):
         self.cfg = cfg
         self.model = model
         self.B = batch_size
         self.capacity = capacity
         self.extra_batch = extra_batch or {}
         self.eos_id = eos_id
+        # chunked prefill (0 = off → monolithic admission): newcomers
+        # are admitted immediately with a prefill cursor and each step
+        # writes at most ``chunk_tokens`` of prompt into leased pages
+        # while occupied slots keep decoding; the decode hot path then
+        # runs fused (attention + on-device sampling, only (B,) token
+        # ids leave the device). vlm/enc-dec frontends need the whole
+        # prompt at once, so they stay monolithic.
+        self.chunk_tokens = int(chunk_tokens)
+        self._chunked = self.chunk_tokens > 0 and not self.extra_batch
         # telemetry hub: request-lifecycle spans (queued → admitted →
         # prefill → decode × N → done/deferred) land in obs.tracer under
         # the ``obs_tenant`` label; disabled hub → one attr check per site
@@ -120,10 +131,20 @@ class ServeEngine:
                                auditor=auditor, enc_len=enc_len,
                                obs=self.obs)
         self._logits: Optional[np.ndarray] = None    # (B, V*) host copy
+        # chunked-prefill bookkeeping: cursor = prompt tokens written so
+        # far (-1 = not prefilling); _next = sampled-but-unemitted token
+        # per slot (the fused decode path never ships logits to host)
+        self._cursor = np.full(batch_size, -1, np.int64)
+        self._next = np.zeros(batch_size, np.int64)
+        self._rr = 0                     # chunk-scheduler rotation
         pf = jax.jit(lambda p, b: model.prefill(p, b))
         df = jax.jit(model.decode_paged, donate_argnums=(1,))
+        cf = jax.jit(model.prefill_chunk_paged, donate_argnums=(1,))
+        ff = jax.jit(model.decode_paged_fused, donate_argnums=(1,))
         self._prefill_fn = prefill_wrap(pf) if prefill_wrap else pf
         self._decode_fn = decode_wrap(df) if decode_wrap else df
+        self._chunk_fn = prefill_wrap(cf) if prefill_wrap else cf
+        self._fused_fn = decode_wrap(ff) if decode_wrap else ff
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens, max_new_tokens=16, temperature=0.0):
@@ -175,7 +196,11 @@ class ServeEngine:
                 req = self.waiting.popleft()
             owner = f"req{req.rid}"
             plen = len(req.prompt)
-            n_pages = max(1, -(-plen // self.kv.page_size))
+            # chunked: the admission ask is one chunk's pages, later
+            # chunks fault the rest of the table in incrementally
+            lease_len = (min(plen, self.chunk_tokens) if self._chunked
+                         else plen)
+            n_pages = max(1, -(-lease_len // self.kv.page_size))
             live = any(s is not None for s in self.slots)
             if (self.admission_gate is not None and live
                     and not self.admission_gate(owner, n_pages)):
@@ -192,7 +217,7 @@ class ServeEngine:
                     self.waiting.appendleft(req)
                 break
             try:
-                self.kv.admit(i, owner, plen)
+                self.kv.admit(i, owner, plen, lease_len=lease_len)
             except MMUError as exc:
                 # pool exhausted / quota: requeue at the front, retry
                 # next step once EOS recycling returns pages
@@ -212,6 +237,17 @@ class ServeEngine:
                 self.obs.tracer.event(self.obs_tenant, req.rid,
                                       PHASE_ADMITTED, slot=i,
                                       pages=self.kv.tables[i].n_pages)
+            if self._chunked:
+                # admitted immediately with a prefill cursor; the chunk
+                # scheduler writes the prompt across subsequent steps
+                # while occupied slots keep decoding. positions stays -1
+                # (dead for decode) until the last chunk lands.
+                self.slots[i] = req
+                self.positions[i] = -1
+                self._cursor[i] = 0
+                self.stats.admitted += 1
+                self.stats.pages_leased += self.kv.tables[i].n_pages
+                continue
             logits, caches = self._prefill_fn(
                 params, self._newcomer_batch(i, req))
             self.kv.write_prefill(caches, i, plen)
@@ -232,11 +268,106 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # Stepping
     # ------------------------------------------------------------------
+    # ------------------------------------------------------------------
+    # Chunked prefill: bounded prompt writes interleaved with decode
+    # ------------------------------------------------------------------
+    def _sample_one(self, logits, temperature):
+        """Host-side sample of one token from (V*,) logits — used once
+        per request, for the first token after the last prefill chunk."""
+        lg = logits[:self.cfg.vocab]
+        if temperature <= 0.0:
+            return int(np.argmax(lg))
+        g = self.rng.gumbel(size=lg.shape[0])
+        return int(np.argmax(lg / temperature + g))
+
+    def _abort_prefill(self, i, exc):
+        """A chunk's page fault bounced on the MMU mid-prefill: release
+        everything written so far and requeue the request at the front —
+        it restarts from token 0 once EOS recycling returns pages."""
+        req = self.slots[i]
+        self.stats.deferred += 1
+        self.stats.pages_freed += self.kv.tables[i].n_pages
+        self.kv.release(i)
+        self.slots[i] = None
+        self.positions[i] = -1
+        self._cursor[i] = -1
+        with self._lock:
+            self.waiting.appendleft(req)
+        if self.obs.enabled:
+            self.obs.tracer.event(self.obs_tenant, req.rid, PHASE_DEFERRED,
+                                  cause=f"{type(exc).__name__}_mid_prefill")
+        if all(s is None for s in self.slots):
+            # nothing live will ever free a page — surface the
+            # exhaustion instead of re-admitting into the same wall
+            raise exc
+
+    def _prefill_chunks(self, params):
+        """One step's chunk budget: write at most ``chunk_tokens`` of
+        prompt across the slots that are mid-prefill, round-robin (the
+        rotation point advances every step so concurrent newcomers share
+        the budget fairly). Chunks are never split below
+        min(chunk_tokens, remaining) — the compile universe stays one
+        shape per (chunk_tokens, prompt_len % chunk_tokens) pair."""
+        prefilling = [i for i in range(self.B)
+                      if self.slots[i] is not None and self._cursor[i] >= 0]
+        if not prefilling:
+            return
+        budget = self.chunk_tokens
+        rot = self._rr % len(prefilling)
+        self._rr += 1
+        for i in prefilling[rot:] + prefilling[:rot]:
+            req = self.slots[i]
+            plen = len(req.prompt)
+            start = int(self._cursor[i])
+            c = min(self.chunk_tokens, plen - start)
+            if c > budget:
+                break
+            budget -= c
+            before = self.kv.tables[i].n_pages
+            try:
+                # incremental leasing: fault in the pages this chunk
+                # spans (admission only leased the first chunk's worth)
+                self.kv.ensure(i, start + c - 1)
+                grown = self.kv.tables[i].n_pages - before
+                self.stats.page_faults += grown
+                self.stats.pages_leased += grown
+            except MMUError as exc:
+                grown = self.kv.tables[i].n_pages - before
+                self.stats.page_faults += grown
+                self.stats.pages_leased += grown
+                self._abort_prefill(i, exc)
+                continue
+            tokens = jnp.asarray(req.prompt[None, start:start + c])
+            logits, self.kv.state = self._chunk_fn(
+                params, self.kv.state, tokens, jnp.int32(i),
+                jnp.asarray(self.kv.block_tables()[i]), jnp.int32(start))
+            self._cursor[i] = start + c
+            self.stats.prefill_chunks += 1
+            if self.obs.enabled:
+                self.obs.tracer.event(self.obs_tenant, req.rid,
+                                      PHASE_PREFILL_CHUNK, tokens=c,
+                                      start=start)
+                self.obs.observe("serve_prefill_chunk_tokens", c,
+                                 tenant=self.obs_tenant)
+            if start + c >= plen:
+                # prefill complete: sample the first token from the last
+                # chunk's logits (the one host round-trip per request),
+                # then the slot joins the fused decode batch
+                lg = np.asarray(jax.device_get(logits), np.float32)[0]
+                self._next[i] = self._sample_one(lg, req.temperature)
+                self._cursor[i] = -1
+                self.positions[i] = plen
+                self.stats.prefills += 1
+                if self.obs.enabled:
+                    self.obs.tracer.event(self.obs_tenant, req.rid,
+                                          PHASE_PREFILL, tokens=plen)
+
     def _finish(self, i, finished):
         r = self.slots[i]
         r.done = True
         self.slots[i] = None                      # recycle the slot
         self.positions[i] = -1
+        self._cursor[i] = -1
         self.stats.pages_freed += self.kv.tables[i].n_pages
         self.kv.release(i)                        # pages back to the MMU
         self.completed[r.rid] = r
@@ -265,11 +396,16 @@ class ServeEngine:
     def _step(self, params) -> List[Request]:
         finished: List[Request] = []
         self._admit(params)
-        active = [i for i in range(self.B) if self.slots[i] is not None]
+        if self._chunked:
+            self._prefill_chunks(params)
+        # mid-prefill slots (positions -1) occupy a slot but don't emit
+        active = [i for i in range(self.B) if self.slots[i] is not None
+                  and self.positions[i] >= 0]
         if not active:
             return finished
         self.stats.steps += 1
-        nxt = self._sample(self._logits, active)
+        nxt = (self._next if self._chunked
+               else self._sample(self._logits, active))
         token = np.zeros((self.B, 1), np.int32)
         for i in active:
             r = self.slots[i]
@@ -286,7 +422,8 @@ class ServeEngine:
                 self._finish(i, finished)
             elif self.positions[i] >= self.capacity:
                 self._finish(i, finished)               # KV budget: truncate
-        for i in [i for i in range(self.B) if self.slots[i] is not None]:
+        for i in [i for i in range(self.B) if self.slots[i] is not None
+                  and self.positions[i] >= 0]:
             # demand paging — counters track engine-local deltas, never
             # the pool-global ones (a shared --virtualized tenant pool
             # serves other engines too); demand-grown pages count as
@@ -306,14 +443,31 @@ class ServeEngine:
                 self.stats.page_faults += grown
                 self.stats.pages_leased += grown
                 self._finish(i, finished)
-        remaining = [i for i in range(self.B) if self.slots[i] is not None]
+        remaining = [i for i in range(self.B) if self.slots[i] is not None
+                     and self.positions[i] >= 0]
         if not remaining:
             return finished
         self.stats.decode_steps += 1
-        logits, self.kv.state = self._decode_fn(
-            params, self.kv.state, jnp.asarray(token),
-            jnp.asarray(self.positions), jnp.asarray(self.kv.block_tables()))
-        self._logits = np.asarray(jax.device_get(logits), np.float32)
+        if self._chunked:
+            # fused decode: paged attention + on-device sampling — only
+            # the (B,) sampled token ids cross to host, not (B, V) logits
+            temps = np.zeros(self.B, np.float32)
+            for i in remaining:
+                temps[i] = self.slots[i].temperature
+            toks, self.kv.state = self._fused_fn(
+                params, self.kv.state, jnp.asarray(token),
+                jnp.asarray(self.positions),
+                jnp.asarray(self.kv.block_tables()), jnp.asarray(temps),
+                jnp.int32(self.stats.steps))
+            toks = np.asarray(jax.device_get(toks))
+            for i in remaining:
+                self._next[i] = int(toks[i])
+        else:
+            logits, self.kv.state = self._decode_fn(
+                params, self.kv.state, jnp.asarray(token),
+                jnp.asarray(self.positions),
+                jnp.asarray(self.kv.block_tables()))
+            self._logits = np.asarray(jax.device_get(logits), np.float32)
         if self.obs.enabled:
             for i in remaining:
                 self.obs.tracer.event(self.obs_tenant, self.slots[i].rid,

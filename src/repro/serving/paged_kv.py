@@ -73,11 +73,18 @@ class PagedKVCache:
     # ------------------------------------------------------------------
     # Leasing (slot ↔ MMU page table)
     # ------------------------------------------------------------------
-    def admit(self, slot: int, owner: str, prompt_len: int):
+    def admit(self, slot: int, owner: str, prompt_len: int,
+              lease_len: Optional[int] = None):
         """Lease pages for a newcomer's prompt. Raises QuotaExceeded /
-        OutOfMemory without touching any slot state."""
+        OutOfMemory without touching any slot state.
+
+        ``lease_len`` (chunked prefill) leases only enough pages for the
+        first ``lease_len`` prompt tokens; later chunks grow the table
+        through :meth:`ensure` — incremental leasing, so a long prompt's
+        admission ask is one chunk, not the whole prompt."""
         assert self.tables[slot] is None, f"slot {slot} still leased"
-        n = max(1, cdiv(prompt_len, self.page_size))
+        n = max(1, cdiv(min(lease_len or prompt_len, prompt_len),
+                        self.page_size))
         # one slot's worth of pages is each request-owner's quota
         self.pool.set_quota(owner, self.blocks_per_slot
                             * self.pool.segment_bytes)

@@ -1,0 +1,242 @@
+"""Chunked prefill fused into the decode step — greedy parity with
+monolithic admission, one-shot-prefill logit parity at the model level,
+mapping invariants while chunk admission interleaves across slots,
+per-chunk obs events, and the MMU-bounce abort/requeue path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to seeded-random sweeps
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.mmu import SegmentPool
+from repro.kernels.common import cdiv
+from repro.models import build_model
+from repro.obs import ObsHub, PHASE_PREFILL_CHUNK
+from repro.serving import ServeEngine
+from repro.serving.paged_kv import PagedKVCache
+
+CFG = get_config("qwen1.5-0.5b", reduced=True)
+
+
+def _engine(model, batch=2, cap=64, **kw):
+    return ServeEngine(CFG, model, batch, cap, page_size=8, **kw)
+
+
+# ===========================================================================
+# Parity: chunked admission must not change what the engine generates
+# ===========================================================================
+
+def test_chunked_matches_monolithic_greedy(rng_key):
+    """Same greedy submissions through a monolithic (chunk_tokens=0)
+    and a chunked (chunk_tokens=8) engine: identical out_tokens per
+    request, zero full prefills, chunk count = Σ ceil(plen / chunk)."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    # lengths straddle the chunk size: < chunk, = chunk, % chunk ≠ 0
+    plens = [5, 8, 17, 23]
+    outs = {}
+    for chunk in (0, 8):
+        eng = _engine(model, batch=2, cap=64, chunk_tokens=chunk)
+        rids = [eng.submit(np.arange(p) % CFG.vocab,
+                           max_new_tokens=3 + (j % 2), temperature=0.0)
+                for j, p in enumerate(plens)]
+        eng.run_round(params)
+        outs[chunk] = [eng.completed[r].out_tokens for r in rids]
+        if chunk:
+            assert eng.stats.full_prefills == 0
+            assert eng.stats.prefill_chunks == sum(
+                cdiv(p, chunk) for p in plens)
+            assert eng.stats.prefills == len(plens)
+    assert outs[0] == outs[8]
+
+
+def test_newcomer_admitted_while_batch_decodes(rng_key):
+    """The admission tail the PR kills: a long newcomer arriving
+    mid-decode is admitted immediately (slot occupied, cursor live)
+    and existing slots keep emitting tokens on the very same steps its
+    chunks land."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = _engine(model, batch=2, cap=64, chunk_tokens=8)
+    r0 = eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=8,
+                    temperature=0.0)
+    eng.step(params)                       # r0 prefilled + first token
+    n0 = len(eng.completed.get(r0, eng.slots[0]).out_tokens)
+    r1 = eng.submit(np.arange(24) % CFG.vocab, max_new_tokens=2,
+                    temperature=0.0)
+    eng.step(params)                       # r1 admitted, first chunk lands
+    slot1 = [i for i in range(2) if eng.slots[i] is not None
+             and eng.slots[i].rid == r1]
+    assert slot1, "newcomer must occupy a slot immediately"
+    assert eng._cursor[slot1[0]] == 8      # exactly one chunk written
+    assert eng.positions[slot1[0]] == -1   # not decoding yet
+    # r0 emitted a token on the step that carried r1's chunk
+    assert len(eng.slots[0].out_tokens) == n0 + 1
+    eng.run_round(params)
+    assert len(eng.completed[r0].out_tokens) == 8
+    assert len(eng.completed[r1].out_tokens) == 2
+
+
+def test_chunked_prefill_logits_match_one_shot(rng_key):
+    """Model-level acceptance bound: chunked prefill through a permuted
+    block table, then a paged decode step, matches one-shot prefill
+    (monolithic ``prefill`` + ``write_prefill_paged``) ≤ 1e-3 on
+    logits."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    ps, nb, plen, chunk = 8, 4, 21, 8
+    block_row = jnp.asarray([2, 0, 3, 1], jnp.int32)   # non-identity map
+    prompt = np.asarray(jax.random.randint(rng_key, (plen,), 0, CFG.vocab))
+
+    state = model.init_paged_state(1, nb, ps)
+    logits = None
+    for start in range(0, plen, chunk):
+        tokens = jnp.asarray(prompt[None, start:start + chunk])
+        logits, state = model.prefill_chunk_paged(
+            params, state, tokens, jnp.int32(0), block_row,
+            jnp.int32(start))
+
+    # one-shot oracle: monolithic prefill scattered into the same pages
+    want, caches = model.prefill(params, {"tokens": jnp.asarray([prompt])})
+    state1 = model.write_prefill_paged(
+        model.init_paged_state(1, nb, ps), caches, slot=jnp.int32(0),
+        block_row=block_row, length=plen, page_size=ps)
+    np.testing.assert_allclose(
+        np.asarray(logits[0, :CFG.vocab], np.float32),
+        np.asarray(want[0, :CFG.vocab], np.float32),
+        atol=1e-3, rtol=1e-3)
+
+    # one decode step on top of each state: chunk-built pages must be
+    # indistinguishable from one-shot-built pages
+    tok = int(jnp.argmax(logits[0, :CFG.vocab]))
+    token = jnp.asarray([[tok]], jnp.int32)
+    positions = jnp.asarray([plen], jnp.int32)
+    dl, _ = model.decode_paged(params, state, token, positions,
+                               block_row[None])
+    dl1, _ = model.decode_paged(params, state1, token, positions,
+                                block_row[None])
+    np.testing.assert_allclose(
+        np.asarray(dl[0, :CFG.vocab], np.float32),
+        np.asarray(dl1[0, :CFG.vocab], np.float32),
+        atol=1e-3, rtol=1e-3)
+
+
+# ===========================================================================
+# Property: interleaved chunk admission keeps the mapping sound
+# ===========================================================================
+
+class _StubModel:
+    def kv_page_bytes(self, page_size):
+        return 1024
+
+    def init_paged_state(self, batch, num_pages, page_size, enc_len=None):
+        return []
+
+    def write_prefill_paged(self, state, caches, slot, block_row, length,
+                            page_size):
+        return state
+
+
+@settings(max_examples=25, deadline=None)
+@given(plens=st.lists(st.integers(min_value=1, max_value=64),
+                      min_size=3, max_size=9),
+       chunk=st.integers(min_value=1, max_value=16))
+def test_interleaved_chunk_admission_invariants(plens, chunk):
+    """Incremental leasing under interleaved chunk streams: admission
+    leases only the first chunk's pages, every later chunk faults its
+    pages in while *other* slots are mid-prefill, and at every step no
+    physical page is double-mapped and all tables stay in-bounds."""
+    kv = PagedKVCache(cfg=None, model=_StubModel(), batch_size=3,
+                      capacity=64, page_size=8)
+    queue = [plens[i::3] for i in range(3)]     # per-slot request streams
+    cursor = [None] * 3
+    total = [0] * 3
+    rid = 0
+    while any(queue[i] or cursor[i] is not None for i in range(3)):
+        for i in range(3):
+            if cursor[i] is None:
+                if not queue[i]:
+                    continue
+                total[i] = queue[i].pop(0)
+                rid += 1
+                kv.admit(i, f"req{rid}", total[i],
+                         lease_len=min(chunk, total[i]))
+                cursor[i] = 0
+                # the admission ask is one chunk, not the whole prompt
+                assert kv.tables[i].n_pages == max(
+                    1, cdiv(min(chunk, total[i]), kv.page_size))
+            else:
+                c = min(chunk, total[i] - cursor[i])
+                kv.ensure(i, cursor[i] + c - 1)
+                cursor[i] += c
+                if cursor[i] >= total[i]:
+                    assert kv.tables[i].n_pages == cdiv(total[i],
+                                                        kv.page_size)
+                    kv.release(i)
+                    cursor[i] = None
+            assert kv.no_double_mapping()
+            assert kv.tables_in_bounds()
+    assert kv.pool.pages_in_use() == 0
+
+
+# ===========================================================================
+# Observability: per-chunk span events + chunk-size histogram
+# ===========================================================================
+
+def test_chunk_obs_events(rng_key):
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    hub = ObsHub(enabled=True)
+    eng = _engine(model, batch=1, cap=64, chunk_tokens=8, obs=hub,
+                  obs_tenant="t")
+    eng.submit(np.arange(20) % CFG.vocab, max_new_tokens=2,
+               temperature=0.0)
+    eng.run_round(params)
+    span = hub.tracer.spans("t")[0]
+    assert span.n_prefill_chunks == 3               # 8 + 8 + 4
+    assert span.phases().count(PHASE_PREFILL_CHUNK) == 3
+    assert span.prefill_s is not None and span.prefill_s >= 0.0
+    hist = hub.registry.snapshot()["histograms"]
+    (summary,) = hist["serve_prefill_chunk_tokens"].values()
+    assert summary["count"] == 3
+    assert summary["max"] == 8 and summary["min"] == 4
+
+
+# ===========================================================================
+# MMU bounce mid-prefill: abort, requeue, restart once pages return
+# ===========================================================================
+
+def test_mmu_bounce_mid_prefill_aborts_and_requeues(rng_key):
+    """A later chunk's page fault hits a dry shared pool: the engine
+    releases the partial prefill, requeues the request at the front,
+    keeps decoding the live slot, and completes everything once the
+    pressure clears — with lease accounting balanced."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    page_bytes = model.kv_page_bytes(8)
+    pool = SegmentPool(total_bytes=8 * page_bytes,
+                       segment_bytes=page_bytes)
+    eng = _engine(model, batch=2, cap=32, chunk_tokens=8, pool=pool)
+    r0 = eng.submit(np.arange(6) % CFG.vocab, max_new_tokens=4,
+                    temperature=0.0)
+    r1 = eng.submit(np.arange(20) % CFG.vocab, max_new_tokens=3,
+                    temperature=0.0)
+    eng.step(params)          # r0 prefills fully; r1 admitted (1 page)
+    eng.step(params)          # r1's chunk 0 lands in its leased page
+    free_segs = pool.n_segments - pool.pages_in_use()
+    hog = pool.alloc(free_segs * page_bytes, "hog")
+    eng.step(params)          # chunk at start=8 faults → abort + requeue
+    assert eng.stats.deferred >= 1
+    assert eng.waiting and eng.waiting[0].rid == r1
+    assert eng.kv.tables[1] is None or eng.slots[1] is None
+    assert any(s is not None and s.rid == r0 for s in eng.slots)
+    pool.free(hog.handle, "hog")
+    eng.run_round(params)
+    assert len(eng.completed[r0].out_tokens) == 4
+    assert len(eng.completed[r1].out_tokens) == 3
+    assert eng.stats.pages_leased == eng.stats.pages_freed
+    assert pool.pages_in_use() == 0

@@ -202,6 +202,114 @@ def test_paged_matches_contiguous_decode_attention():
                                atol=1e-3, rtol=1e-3)
 
 
+@pytest.mark.parametrize("window", [0, 6])
+def test_fused_decode_matches_scatter_then_paged(window):
+    """The fused serving step (new-token K/V substituted in-register)
+    must match scatter-then-paged-attention ≤ 1e-3, and the XLA
+    fallback must agree on the *same* inputs. Includes a dead slot
+    (length 0 → zeros)."""
+    from repro.kernels.decode_attention.ops import (
+        decode_attention_op, fused_decode_step_op,
+        fused_paged_attention_xla)
+    ks = jax.random.split(KEY, 5)
+    B, Hq, Hkv, hd, ps, nb = 3, 4, 2, 32, 8, 4
+    P = B * nb + 2
+    q = jax.random.normal(ks[0], (B, 1, Hq, hd), jnp.float32)
+    kn = jax.random.normal(ks[1], (B, 1, Hkv, hd), jnp.float32)
+    vn = jax.random.normal(ks[2], (B, 1, Hkv, hd), jnp.float32)
+    kp = jax.random.normal(ks[3], (P, ps, Hkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[4], (P, ps, Hkv, hd), jnp.float32)
+    perm = np.random.default_rng(1).permutation(P)[:B * nb]
+    bt = jnp.asarray(perm.reshape(B, nb).astype(np.int32))
+    # lengths INCLUDE the new token; slot 1 is dead
+    lens = jnp.asarray(np.array([14, 0, 32], np.int32))
+
+    fused = fused_decode_step_op(q, kn, vn, kp, vp, lens, bt,
+                                 window=window)
+    # the XLA fallback speaks kernel layout (B,H,1,hd)
+    xla = fused_paged_attention_xla(
+        q.transpose(0, 2, 1, 3), kn.transpose(0, 2, 1, 3),
+        vn.transpose(0, 2, 1, 3), kp, vp, lens, bt,
+        window=window).transpose(0, 2, 1, 3)
+
+    # oracle: scatter the new token into the pool, then plain paged
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for b, L in enumerate([14, 0, 32]):
+        if L == 0:
+            continue
+        pg, off = int(bt[b, (L - 1) // ps]), (L - 1) % ps
+        kp2[pg, off] = np.asarray(kn)[b, 0]
+        vp2[pg, off] = np.asarray(vn)[b, 0]
+    want = decode_attention_op(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                               lens, window=window, block_tables=bt)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+    assert bool(jnp.all(fused[1] == 0))        # dead slot stays zero
+    assert bool(jnp.all(xla[1] == 0))
+
+
+def test_fused_decode_new_token_only():
+    """Length 1: attention over just the in-register new token must
+    return v_new exactly (softmax over one key), never touch the pool."""
+    from repro.kernels.decode_attention.ops import fused_decode_step_op
+    ks = jax.random.split(KEY, 3)
+    B, Hq, Hkv, hd, ps, nb = 2, 2, 2, 16, 4, 2
+    q = jax.random.normal(ks[0], (B, 1, Hq, hd), jnp.float32)
+    kn = jax.random.normal(ks[1], (B, 1, Hkv, hd), jnp.float32)
+    vn = jax.random.normal(ks[2], (B, 1, Hkv, hd), jnp.float32)
+    # poison the pool with NaNs in *masked* positions — the online
+    # softmax must never mix them in
+    kp = jnp.zeros((B * nb, ps, Hkv, hd), jnp.float32)
+    vp = jnp.full((B * nb, ps, Hkv, hd), 7.25, jnp.float32)
+    bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    lens = jnp.ones((B,), jnp.int32)
+    out = fused_decode_step_op(q, kn, vn, kp, vp, lens, bt)
+    want = jnp.broadcast_to(vn, (B, 1, Hq, hd))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("V", [512, 1000])
+def test_sample_tokens_matches_argmax(V):
+    """On-device sampler vs XLA fallback vs host np.argmax: greedy rows
+    (T=0) and Gumbel rows (T>0) must agree exactly — argmax of
+    logits + noise·T is scale-invariant, so one formula covers both."""
+    from repro.kernels.decode_attention.ops import (sample_tokens_op,
+                                                    sample_tokens_xla)
+    ks = jax.random.split(KEY, 2)
+    B = 4
+    logits = jax.random.normal(ks[0], (B, V), jnp.float32) * 3.0
+    noise = jax.random.gumbel(ks[1], (B, V), jnp.float32)
+    temps = jnp.asarray([0.0, 0.8, 0.0, 1.5], jnp.float32)
+    got = sample_tokens_op(logits, temps, noise)
+    xla = sample_tokens_xla(logits, temps, noise)
+    want = np.argmax(np.asarray(logits)
+                     + np.asarray(noise) * np.asarray(temps)[:, None],
+                     axis=-1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(np.asarray(xla), want)
+
+
+def test_sample_tokens_tie_keeps_first():
+    """Exact ties must resolve to the lowest index (np.argmax
+    semantics), including ties that straddle vocab blocks."""
+    from repro.kernels.decode_attention.ops import (sample_tokens_op,
+                                                    sample_tokens_xla)
+    V = 4096                      # two 2048-wide blocks
+    logits = np.zeros((2, V), np.float32)
+    logits[0, [100, 3000]] = 5.0  # tie across blocks → keep 100
+    logits[1, [2050, 2051]] = 2.0  # tie inside block 2 → keep 2050
+    temps = jnp.zeros((2,), jnp.float32)
+    noise = jnp.zeros((2, V), jnp.float32)
+    want = np.array([100, 2050], np.int32)
+    got = sample_tokens_op(jnp.asarray(logits), temps, noise)
+    xla = sample_tokens_xla(jnp.asarray(logits), temps, noise)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(np.asarray(xla), want)
+
+
 # ---------------------------------------------------------------------------
 # rglru scan
 # ---------------------------------------------------------------------------
