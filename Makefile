@@ -1,12 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fairness bench bench-paged bench-prefill bench-slo bench-obs
+.PHONY: test smoke fairness bench bench-paged bench-prefill bench-slo bench-obs bench-kv
 
 test:            ## tier-1 verify
 	$(PY) -m pytest -x -q
 
-smoke: test fairness bench-paged bench-prefill bench-slo bench-obs   ## tier-1 + quick benchmark checks
+smoke: test fairness bench-paged bench-prefill bench-slo bench-obs bench-kv   ## tier-1 + quick benchmark checks
 
 fairness:        ## WFQ vs broker vs passthrough share table (quick)
 	$(PY) benchmarks/scheduler_fairness.py --quick
@@ -22,6 +22,9 @@ bench-slo:       ## deadline attainment under overload: slo vs wfq/broker
 
 bench-obs:       ## telemetry-plane overhead budgets (disabled <1%, enabled <5%)
 	$(PY) benchmarks/obs_overhead.py --quick
+
+bench-kv:        ## KV page hierarchy: warm-admission + swap-pressure gates
+	$(PY) benchmarks/kv_hierarchy.py --quick
 
 bench:           ## full benchmark harness (CSV)
 	$(PY) benchmarks/run.py

@@ -69,7 +69,8 @@ class Autoscaler:
                  cooldown_s: float = 5.0, calm_s: float = 10.0,
                  max_devices: Optional[int] = None,
                  scale_down: bool = True,
-                 time_fn: Callable[[], float] = time.monotonic):
+                 time_fn: Callable[[], float] = time.monotonic,
+                 swap_cb: Optional[Callable[[str], bool]] = None):
         self.vmm = vmm
         self.sustain = sustain
         self.window_s = window_s
@@ -78,6 +79,11 @@ class Autoscaler:
         self.max_devices = max_devices
         self.scale_down = scale_down
         self.time_fn = time_fn
+        # swap-before-deny at the capacity layer: when a grow cannot be
+        # placed even after defragmentation, ``swap_cb(tenant_name)``
+        # asks the KV swap tier to shed device pressure to host memory;
+        # True turns ``grow_blocked`` into ``swap_relief``.
+        self.swap_cb = swap_cb
         self.actions: deque = deque(maxlen=256)
         self._watched: Dict[str, _Watch] = {}
         self._hooked: set = set()        # tenants whose cq has our handler
@@ -195,6 +201,10 @@ class Autoscaler:
         old = tuple(w.tenant.vslice.spec.shape)
         cands = self._candidates(old)
         if not cands:
+            if self.swap_cb is not None and self.swap_cb(w.tenant.name):
+                return self._record(w, now, action="swap_relief", frm=old,
+                                    to=None, pressure_events=n_events,
+                                    reason="at capacity")
             return self._record(w, now, action="grow_blocked", frm=old,
                                 to=None, pressure_events=n_events,
                                 reason="at capacity")
@@ -211,6 +221,13 @@ class Autoscaler:
             return self._record(w, now, action="grow", frm=old,
                                 to=cands[0], pressure_events=n_events,
                                 defragmented=True)
+        if self.swap_cb is not None and self.swap_cb(w.tenant.name):
+            # device capacity is exhausted but the KV swap tier absorbed
+            # the pressure (a victim slot parked to host memory) — the
+            # tenant keeps serving instead of waiting out the block
+            return self._record(w, now, action="swap_relief", frm=old,
+                                to=cands[0], pressure_events=n_events,
+                                reason="swapped under capacity block")
         return self._record(w, now, action="grow_blocked", frm=old,
                             to=cands[0], pressure_events=n_events,
                             reason="no slice even after defrag")

@@ -26,6 +26,25 @@ contiguity requirement). This is the substrate for the paged KV cache in
 grows its table on demand (counted as ``page_faults``), and returns the
 pages on EOS — making serving memory tenant-accountable through the same
 ownership/quota machinery as plain segment allocations.
+
+Page hierarchy: every page-granular frame carries a **refcount**, so
+multiple tables (and out-of-table pins, e.g. a prefix cache) can map
+the same physical frame — the multi-tenancy move of sharing immutable
+resources while enforcing isolation on write:
+
+* ``alloc_pages(..., shared_prefix=[...])`` maps existing frames at the
+  front of a fresh table (refcount++ each, no new HBM);
+* ``fork_page`` is the copy-on-write pivot: it swaps one shared mapping
+  for a freshly allocated private frame and drops the old reference
+  (the caller copies the bytes device-side);
+* ``retain_frame``/``release_frame`` pin frames from outside any table;
+* ``swap_out_page``/``swap_in_page`` mark a table entry swapped
+  (physical page → ``SWAPPED``) releasing the frame, and later fault it
+  back in on a fresh frame — the host-memory swap tier's MMU half.
+
+A frame is returned to the backend allocator exactly when its last
+reference drops, wherever that drop comes from (free, fork, swap,
+unpin).
 """
 from __future__ import annotations
 
@@ -38,6 +57,10 @@ import numpy as np
 
 SEGMENT_BYTES = 16 * 2 ** 20          # 16 MiB
 HBM_PER_CHIP = 16 * 2 ** 30           # v5e: 16 GB
+
+#: PageTable entry sentinel: the logical block is swapped out to the
+#: host tier — it has no physical frame until ``swap_in_page``.
+SWAPPED = -1
 
 
 class MMUError(Exception):
@@ -249,8 +272,13 @@ class MMUStats:
     peak_segs: int = 0
     # paging counters (PageTable API)
     pages_allocated: int = 0
-    pages_freed: int = 0
+    pages_freed: int = 0            # physical frames returned (refs → 0)
     page_faults: int = 0            # demand growths of a live page table
+    # page-hierarchy counters (prefix sharing / CoW / swap tier)
+    shared_maps: int = 0            # mappings served by an existing frame
+    cow_forks: int = 0              # shared frames forked on first write
+    swap_outs: int = 0              # table entries evicted to host tier
+    swap_ins: int = 0               # refaults back onto fresh frames
 
     def alloc_latency_us(self):
         return (self.alloc_ns_total / max(self.allocs, 1)) / 1e3
@@ -289,6 +317,12 @@ class SegmentPool:
         self.alloc_backend = BACKENDS[backend](self.n_segments)
         self.allocations: Dict[int, Allocation] = {}
         self.page_tables: Dict[int, PageTable] = {}
+        # page-hierarchy state: physical frame → reference count (every
+        # table mapping + every out-of-table pin holds one reference);
+        # _pins tracks the pin component so the consistency invariant
+        # can be checked exactly
+        self.frame_refs: Dict[int, int] = {}
+        self._pins: Dict[int, int] = {}
         self.quota_segs: Dict[str, int] = {}
         self.denied_by_owner: Dict[str, int] = {}
         self.stats = MMUStats()
@@ -403,15 +437,28 @@ class SegmentPool:
     # Page-table API (page = one segment, no contiguity — the paged KV
     # cache substrate; see module docstring)
     # ==================================================================
-    def _alloc_single_pages(self, n: int, owner: str) -> List[int]:
-        """n single-segment pages, or raise (lock held by caller)."""
-        q = self.quota_segs.get(owner)
-        if q is not None and self._owner_segs(owner) + n > q:
-            self._deny(owner, "quota_exceeded")
-            if self.auditor:
-                self.auditor.record("quota_exceeded", owner,
-                                    {"ask_pages": n, "quota": q})
-            raise QuotaExceeded(f"{owner}: {n} pages over quota {q}")
+    def _alloc_single_pages(self, n: int, owner: str,
+                            check_quota: bool = True,
+                            quota_extra: int = 0) -> List[int]:
+        """n single-segment pages, or raise (lock held by caller).
+
+        Each fresh frame starts with refcount 1. ``check_quota=False``
+        skips the quota test for mapping-neutral allocations (CoW fork,
+        swap-in refault: one mapping is replaced by another, so the
+        owner's logical footprint does not change). ``quota_extra``
+        charges additional mappings the caller is about to create
+        (shared-prefix maps) against the quota in the same check."""
+        if check_quota:
+            q = self.quota_segs.get(owner)
+            if q is not None and \
+                    self._owner_segs(owner) + n + quota_extra > q:
+                self._deny(owner, "quota_exceeded")
+                if self.auditor:
+                    self.auditor.record("quota_exceeded", owner,
+                                        {"ask_pages": n + quota_extra,
+                                         "quota": q})
+                raise QuotaExceeded(
+                    f"{owner}: {n + quota_extra} pages over quota {q}")
         pages: List[int] = []
         for _ in range(n):
             start = self.alloc_backend.alloc(1)
@@ -423,6 +470,8 @@ class SegmentPool:
                     f"{owner}: {n} pages; "
                     f"{self.alloc_backend.free_segments()} free")
             pages.append(start)
+        for p in pages:
+            self.frame_refs[p] = 1
         self.stats.pages_allocated += n
         used = self.n_segments - self.alloc_backend.free_segments()
         self.stats.peak_segs = max(self.stats.peak_segs, used)
@@ -430,13 +479,43 @@ class SegmentPool:
             self.obs.count("mmu_pages_allocated_total", n, owner=owner)
         return pages
 
-    def alloc_pages(self, n: int, owner: str) -> PageTable:
-        """Lease ``n`` pages under a fresh page table (quota-checked)."""
+    def _release_frame_locked(self, p: int, owner: str):
+        """Drop one reference; free the frame at refcount 0."""
+        refs = self.frame_refs.get(p)
+        assert refs is not None and refs > 0, \
+            f"release of untracked frame {p}"
+        if refs == 1:
+            del self.frame_refs[p]
+            self.alloc_backend.free(p, 1)
+            self.stats.pages_freed += 1
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_pages_freed_total", 1, owner=owner)
+        else:
+            self.frame_refs[p] = refs - 1
+
+    def alloc_pages(self, n: int, owner: str,
+                    shared_prefix: Optional[List[int]] = None) -> PageTable:
+        """Lease ``n`` fresh pages under a fresh page table
+        (quota-checked). ``shared_prefix`` maps existing live frames at
+        the *front* of the table first (refcount++ each, no new HBM) —
+        the prefix-sharing admission path: logical blocks 0..k-1 are the
+        shared prompt prefix, blocks k.. are private."""
+        shared = list(shared_prefix or [])
         with self._lock:
-            pages = self._alloc_single_pages(n, owner)
+            for p in shared:
+                if p not in self.frame_refs:
+                    raise MMUError(f"shared prefix frame {p} is not live")
+            pages = self._alloc_single_pages(n, owner,
+                                             quota_extra=len(shared))
+            for p in shared:
+                self.frame_refs[p] += 1
+            self.stats.shared_maps += len(shared)
+            if shared and self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_shared_maps_total", len(shared),
+                               owner=owner)
             h = self._next_handle
             self._next_handle += 1
-            t = PageTable(h, owner, pages)
+            t = PageTable(h, owner, shared + pages)
             self.page_tables[h] = t
             return t
 
@@ -451,16 +530,103 @@ class SegmentPool:
             return t
 
     def free_pages(self, handle: int, owner: str):
+        """Return the table's mappings; each frame is freed only when
+        its last reference (other tables, pins) drops. Swapped entries
+        hold no frame and are simply dropped."""
         with self._lock:
             t = self._check_table(handle, owner, "cross_owner_free")
             for p in t.pages:
-                self.alloc_backend.free(p, 1)
-            self.stats.pages_freed += t.n_pages
+                if p == SWAPPED:
+                    continue
+                self._release_frame_locked(p, owner)
             self.stats.frees += 1
-            if self.obs is not None and self.obs.enabled:
-                self.obs.count("mmu_pages_freed_total", t.n_pages,
-                               owner=owner)
             del self.page_tables[handle]
+
+    def fork_page(self, handle: int, owner: str, logical: int):
+        """Copy-on-write pivot: swap logical block ``logical``'s shared
+        mapping for a fresh private frame and drop the old reference.
+        Returns ``(old_page, new_page)`` — the *caller* copies the page
+        bytes device-side (old → new) before writing. Mapping-neutral,
+        so no quota check; raises OutOfMemory if the pool is dry (the
+        table is left untouched)."""
+        with self._lock:
+            t = self._check_table(handle, owner, "cross_owner_fork")
+            if not (0 <= logical < t.n_pages):
+                self.stats.denied += 1
+                raise IsolationViolation(
+                    f"logical block {logical} outside table of "
+                    f"{t.n_pages} pages")
+            old = t.pages[logical]
+            if old == SWAPPED:
+                raise MMUError(f"block {logical} is swapped out; "
+                               "refault before forking")
+            new = self._alloc_single_pages(1, owner, check_quota=False)[0]
+            t.pages[logical] = new
+            self._release_frame_locked(old, owner)
+            self.stats.cow_forks += 1
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_cow_forks_total", owner=owner)
+            return old, new
+
+    def retain_frame(self, page: int):
+        """Pin a live frame from outside any table (prefix cache): the
+        frame survives its owning tables' release until released."""
+        with self._lock:
+            if page not in self.frame_refs:
+                raise MMUError(f"retain of untracked frame {page}")
+            self.frame_refs[page] += 1
+            self._pins[page] = self._pins.get(page, 0) + 1
+
+    def release_frame(self, page: int, owner: str = "pin"):
+        """Drop a ``retain_frame`` pin; frees the frame if that was the
+        last reference."""
+        with self._lock:
+            n = self._pins.get(page, 0)
+            if n <= 0:
+                raise MMUError(f"release of unpinned frame {page}")
+            if n == 1:
+                del self._pins[page]
+            else:
+                self._pins[page] = n - 1
+            self._release_frame_locked(page, owner)
+
+    def frame_ref(self, page: int) -> int:
+        """Current reference count of a physical frame (0 = not live)."""
+        with self._lock:
+            return self.frame_refs.get(page, 0)
+
+    def swap_out_page(self, handle: int, owner: str, logical: int) -> int:
+        """Mark a table entry swapped (→ host tier) and release its
+        frame. Returns the old physical page so the caller can key its
+        host copy. The caller must have copied the page bytes off the
+        device *before* this call — the frame may be reused at once."""
+        with self._lock:
+            t = self._check_table(handle, owner, "cross_owner_swap")
+            old = t.pages[logical]
+            if old == SWAPPED:
+                raise MMUError(f"block {logical} already swapped")
+            t.pages[logical] = SWAPPED
+            self._release_frame_locked(old, owner)
+            self.stats.swap_outs += 1
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_swap_outs_total", owner=owner)
+            return old
+
+    def swap_in_page(self, handle: int, owner: str, logical: int) -> int:
+        """Refault a swapped entry onto a fresh frame (mapping-neutral:
+        the swapped entry already counts toward the owner's footprint).
+        Returns the new physical page; the caller copies the host bytes
+        back in."""
+        with self._lock:
+            t = self._check_table(handle, owner, "cross_owner_swap")
+            if t.pages[logical] != SWAPPED:
+                raise MMUError(f"block {logical} is not swapped out")
+            new = self._alloc_single_pages(1, owner, check_quota=False)[0]
+            t.pages[logical] = new
+            self.stats.swap_ins += 1
+            if self.obs is not None and self.obs.enabled:
+                self.obs.count("mmu_swap_ins_total", owner=owner)
+            return new
 
     def translate_page(self, handle: int, owner: str, logical: int) -> int:
         """logical block index → physical byte address (ownership +
@@ -472,6 +638,9 @@ class SegmentPool:
                 raise IsolationViolation(
                     f"logical block {logical} outside table of "
                     f"{t.n_pages} pages")
+            if t.pages[logical] == SWAPPED:
+                raise MMUError(
+                    f"block {logical} is swapped out — refault first")
             return t.pages[logical] * self.segment_bytes
 
     def _check_table(self, handle: int, owner: str, event: str) -> PageTable:
@@ -489,7 +658,18 @@ class SegmentPool:
         return t
 
     def pages_in_use(self) -> int:
-        return sum(t.n_pages for t in self.page_tables.values())
+        """Logical mappings with a physical frame (shared frames count
+        once per mapping; swapped entries count zero)."""
+        return sum(1 for t in self.page_tables.values()
+                   for p in t.pages if p != SWAPPED)
+
+    def frames_in_use(self) -> int:
+        """Distinct physical frames live under the page API."""
+        return len(self.frame_refs)
+
+    def swapped_pages(self) -> int:
+        return sum(1 for t in self.page_tables.values()
+                   for p in t.pages if p == SWAPPED)
 
     # ------------------------------------------------------------------
     def utilization(self) -> float:
@@ -516,15 +696,42 @@ class SegmentPool:
                 "pages_freed": self.stats.pages_freed,
                 "fragmentation": self.fragmentation(),
                 "quota_denials": dict(self.denied_by_owner),
+                # page-hierarchy view (prefix sharing / CoW / swap tier)
+                "frames_in_use": len(self.frame_refs),
+                "shared_frames": sum(1 for r in self.frame_refs.values()
+                                     if r > 1),
+                "shared_maps": self.stats.shared_maps,
+                "cow_forks": self.stats.cow_forks,
+                "swap_outs": self.stats.swap_outs,
+                "swap_ins": self.stats.swap_ins,
+                "swapped_pages": self.swapped_pages(),
             }
 
     def overlaps_ok(self) -> bool:
-        """Invariant: no two live allocations/pages overlap (property
-        tests) — contiguous spans and single-segment pages together."""
+        """Invariant: no two live allocations/frames overlap (property
+        tests) — contiguous spans and single-segment frames together.
+        Shared frames appear in many tables but are *one* physical span;
+        swapped entries hold no frame."""
+        frames = {p for t in self.page_tables.values()
+                  for p in t.pages if p != SWAPPED}
         spans = sorted(
             [(a.start_seg, a.start_seg + a.n_segs)
              for a in self.allocations.values()]
-            + [(p, p + 1) for t in self.page_tables.values()
-               for p in t.pages])
+            + [(p, p + 1) for p in frames])
         return all(spans[i][1] <= spans[i + 1][0]
                    for i in range(len(spans) - 1))
+
+    def refcounts_consistent(self) -> bool:
+        """Hierarchy invariant: every live frame's refcount equals its
+        table mappings plus its pins, every count is positive, and every
+        mapped frame is tracked."""
+        with self._lock:
+            maps: Dict[int, int] = {}
+            for t in self.page_tables.values():
+                for p in t.pages:
+                    if p != SWAPPED:
+                        maps[p] = maps.get(p, 0) + 1
+            for p, r in self.frame_refs.items():
+                if r <= 0 or r != maps.get(p, 0) + self._pins.get(p, 0):
+                    return False
+            return all(p in self.frame_refs for p in maps)

@@ -145,6 +145,7 @@ class _TenantEntry:
     slo_hits: int = 0
     slo_misses: int = 0
     admission_denied: int = 0
+    pressure_relieved: int = 0            # denials converted to swap relief
     mem_pressure: float = 0.0             # cached MMU-pool pressure [0,1]
     has_leases: bool = False              # live page tables → demote only
     mem_denials_seen: int = 0             # quota denials at last refresh
@@ -541,7 +542,8 @@ class SLOPlane(_QueuedPlane):
                  pressure_queue_util: float = 0.85,
                  pressure_deny_util: float = 0.97,
                  pressure_refresh_s: float = 0.05,
-                 deny_hold_s: float = 0.25, **kw):
+                 deny_hold_s: float = 0.25,
+                 relief_cb: Optional[Callable[[str], bool]] = None, **kw):
         self.default_slo_s = dict(self.DEFAULT_SLO_S)
         if default_slo_s:
             self.default_slo_s.update(default_slo_s)
@@ -549,6 +551,10 @@ class SLOPlane(_QueuedPlane):
         self.pressure_deny_util = pressure_deny_util
         self.pressure_refresh_s = pressure_refresh_s
         self.deny_hold_s = deny_hold_s
+        # swap-before-deny: ``relief_cb(tenant_name) -> bool`` asks the
+        # memory hierarchy to shed pressure (KV swap tier parks a victim
+        # slot). True → the submission is admitted instead of denied.
+        self.relief_cb = relief_cb
         super().__init__(**kw)
 
     def _slo_s(self, e: _TenantEntry) -> float:
@@ -595,9 +601,23 @@ class SLOPlane(_QueuedPlane):
                 denied = (now < e.deny_until
                           or (e.mem_pressure >= self.pressure_deny_util
                               and not e.has_leases))
-                if denied:
-                    e.admission_denied += 1
+            if denied and self.relief_cb is not None \
+                    and self.relief_cb(tenant.name):
+                # swap-before-deny: the hierarchy shed pressure (pages
+                # moved to the host tier) — admit instead of denying
+                denied = False
+                with self._lock:
+                    e.pressure_relieved += 1
+                    e.deny_until = 0.0
+                if self.obs.enabled:
+                    self.obs.count("plane_pressure_relieved_total",
+                                   tenant=tenant.name)
+                    self.obs.flight_record(
+                        tenant.name, "pressure_relieved",
+                        {"op": op, "mem_pressure": e.mem_pressure})
             if denied:
+                with self._lock:
+                    e.admission_denied += 1
                 if self.obs.enabled:
                     self.obs.count("plane_admission_denied_total",
                                    tenant=tenant.name)
@@ -648,6 +668,7 @@ class SLOPlane(_QueuedPlane):
                     "p95_wait_ms": 1e3 * p95,
                     "mem_pressure": e.mem_pressure,
                     "admission_denied": e.admission_denied,
+                    "pressure_relieved": e.pressure_relieved,
                 })
         return s
 

@@ -37,6 +37,16 @@ def main():
                     help="chunked prefill budget per engine step (0 = "
                          "monolithic admission); also switches decode to "
                          "the fused attention+sampling step")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="refcounted prompt-prefix sharing: requests "
+                         "with a common prompt prefix map the same KV "
+                         "pages and skip prefill for the shared span "
+                         "(requires --chunk-tokens)")
+    ap.add_argument("--swap", action="store_true",
+                    help="host-memory KV swap tier: under admission "
+                         "pressure a victim slot's pages move to host "
+                         "memory instead of the newcomer being deferred "
+                         "(requires --chunk-tokens)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--virtualized", action="store_true")
     ap.add_argument("--policy", default="hybrid",
@@ -110,12 +120,16 @@ def main():
                              admission_gate=pool_pressure_gate(tenant.pool),
                              extra_batch=extra, obs=obs,
                              obs_tenant="server",
-                             chunk_tokens=args.chunk_tokens)
+                             chunk_tokens=args.chunk_tokens,
+                             share_prefix=args.share_prefix,
+                             swap=args.swap)
     else:
         engine = ServeEngine(cfg, model, args.batch, cap,
                              page_size=args.page_size, extra_batch=extra,
                              obs=obs, obs_tenant="server",
-                             chunk_tokens=args.chunk_tokens)
+                             chunk_tokens=args.chunk_tokens,
+                             share_prefix=args.share_prefix,
+                             swap=args.swap)
 
     for i in range(args.requests):
         plen = args.prompt_len + int(rng.integers(0, 8))
@@ -144,6 +158,11 @@ def main():
           f"chunks={s.prefill_chunks}), {s.page_faults} page "
           f"faults, {s.pages_leased} pages leased / {s.pages_freed} freed, "
           f"{s.deferred} deferred")
+    if args.share_prefix or args.swap:
+        print(f"[serve] kv hierarchy: {s.shared_prefix_hits} warm "
+              f"admissions ({s.shared_prefix_tokens} shared tokens), "
+              f"{s.cow_forks} CoW forks, {s.swap_outs} pages swapped / "
+              f"{s.swap_ins} refaulted")
     print(f"[serve] kv memory: {engine.kv.memory_stats()}")
     if args.metrics:
         snap = obs.tracer.snapshot()

@@ -430,6 +430,67 @@ def write_prefill_to_state(cfg, specs, state, new_caches, slot, block_row,
     return new_state
 
 
+def _kv_pool_sites(cfg, specs):
+    """Yield ``(si, li, scan)`` for every attn/swa layer whose paged
+    state holds K/V page pools — the walk shared by the per-page
+    copy/gather/scatter helpers below."""
+    for si, entry in enumerate(build_layout(cfg, specs)):
+        scan = entry[0] != "unroll"
+        for li, spec in enumerate(entry[1]):
+            if spec.mixer in ("attn", "swa"):
+                yield si, li, scan
+
+
+def _map_kv_pools(cfg, specs, state, fn):
+    """Rebuild ``state`` with ``fn(pool, scan)`` applied to every K and
+    V page pool (other leaves untouched)."""
+    new_state = [list(seg) for seg in state]
+    for si, li, scan in _kv_pool_sites(cfg, specs):
+        layer = dict(new_state[si][li])
+        mixer = dict(layer["mixer"])
+        for kk in ("k", "v"):
+            mixer[kk] = fn(mixer[kk], scan)
+        layer["mixer"] = mixer
+        new_state[si][li] = layer
+    return new_state
+
+
+def copy_kv_page_in_state(cfg, specs, state, src, dst):
+    """Device-side page copy ``dst ← src`` across every layer's K/V
+    pool — the copy-on-write data move (the MMU's ``fork_page`` swaps
+    the mapping, this copies the bytes). Pools are (P, ps, Hkv, hd)
+    unrolled, (n, P, ps, Hkv, hd) under scan."""
+    def cp(pool, scan):
+        if scan:
+            return pool.at[:, dst].set(pool[:, src])
+        return pool.at[dst].set(pool[src])
+    return _map_kv_pools(cfg, specs, state, cp)
+
+
+def gather_kv_page(cfg, specs, state, page):
+    """Read one physical page out of every layer's K/V pool → flat leaf
+    list (layer-major, k then v) — the swap tier's device→host read."""
+    leaves = []
+    for si, li, scan in _kv_pool_sites(cfg, specs):
+        for kk in ("k", "v"):
+            pool = state[si][li]["mixer"][kk]
+            leaves.append(pool[:, page] if scan else pool[page])
+    return leaves
+
+
+def scatter_kv_page(cfg, specs, state, page, leaves):
+    """Inverse of :func:`gather_kv_page`: write the flat leaf list back
+    into physical page ``page`` of every pool — the refault path."""
+    it = iter(leaves)
+
+    def wr(pool, scan):
+        leaf = next(it)
+        if scan:
+            return pool.at[:, page].set(leaf)
+        return pool.at[page].set(leaf)
+    return _map_kv_pools(cfg, specs, state, wr)
+
+
 def _maybe_remat(cfg, fn):
     remat = cfg.sharding.remat
     if remat == "none":

@@ -278,6 +278,24 @@ class Model:
             toks = sample_tokens_xla(logits, temps, noise)
         return toks, state
 
+    def copy_kv_page(self, state, src, dst):
+        """Device-side page copy ``dst ← src`` across every K/V pool —
+        the copy-on-write byte move paired with ``SegmentPool.fork_page``
+        (which swaps the mapping). src/dst are traced page indices."""
+        return lm.copy_kv_page_in_state(self.cfg, self.specs, state,
+                                        src, dst)
+
+    def read_kv_page(self, state, page):
+        """One physical page out of every K/V pool → flat leaf list
+        (the swap tier's device→host read)."""
+        return lm.gather_kv_page(self.cfg, self.specs, state, page)
+
+    def write_kv_page(self, state, page, leaves):
+        """Write a :meth:`read_kv_page` leaf list back into physical
+        page ``page`` (the swap tier's refault write)."""
+        return lm.scatter_kv_page(self.cfg, self.specs, state, page,
+                                  leaves)
+
     def kv_page_bytes(self, page_size) -> int:
         """HBM bytes one KV page spans across all attn/swa layers — the
         MMU lease granularity for the paged cache."""

@@ -28,7 +28,8 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
 from repro.obs.trace import (MAX_EVENTS, PHASE_ADMITTED, PHASE_DECODE,
                              PHASE_DEFERRED, PHASE_DENIED, PHASE_DONE,
                              PHASE_PREFILL, PHASE_PREFILL_CHUNK,
-                             PHASE_QUEUED, RequestTracer,
+                             PHASE_QUEUED, PHASE_REFAULT, PHASE_SWAP_OUT,
+                             RequestTracer,
                              Span)
 
 
@@ -91,5 +92,6 @@ __all__ = [
     "MetricsRegistry",
     "NULL_HUB", "ObsHub", "PHASE_ADMITTED", "PHASE_DECODE",
     "PHASE_DEFERRED", "PHASE_DENIED", "PHASE_DONE", "PHASE_PREFILL",
-    "PHASE_PREFILL_CHUNK", "PHASE_QUEUED", "RequestTracer", "Span", "TRIGGER_KINDS",
+    "PHASE_PREFILL_CHUNK", "PHASE_QUEUED", "PHASE_REFAULT",
+    "PHASE_SWAP_OUT", "RequestTracer", "Span", "TRIGGER_KINDS",
 ]

@@ -39,6 +39,10 @@ PHASE_DECODE = "decode"
 PHASE_DONE = "done"
 PHASE_DEFERRED = "deferred"
 PHASE_DENIED = "denied"
+#: KV page-hierarchy phases: a slot suspended to the host swap tier
+#: mid-decode, and its pages refaulted back on resume.
+PHASE_SWAP_OUT = "swap_out"
+PHASE_REFAULT = "refault"
 
 #: Per-span event-list cap; decode chatter beyond it is counted, not
 #: stored (the span keeps exact n_decode_steps / n_tokens regardless).

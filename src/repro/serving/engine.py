@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.core.mmu import MMUError
 from repro.obs import (NULL_HUB, PHASE_ADMITTED, PHASE_DECODE,
-                       PHASE_DEFERRED, PHASE_PREFILL, PHASE_PREFILL_CHUNK)
+                       PHASE_DEFERRED, PHASE_PREFILL, PHASE_PREFILL_CHUNK,
+                       PHASE_REFAULT, PHASE_SWAP_OUT)
 from repro.serving.paged_kv import PagedKVCache
 
 
@@ -75,6 +76,12 @@ class EngineStats:
     pages_leased: int = 0
     pages_freed: int = 0
     page_faults: int = 0
+    # KV page hierarchy (engine-local deltas, same convention as above)
+    shared_prefix_hits: int = 0         # warm admissions (prefix cache)
+    shared_prefix_tokens: int = 0       # prompt tokens covered by sharing
+    cow_forks: int = 0                  # private forks of shared pages
+    swap_outs: int = 0                  # pages evicted to the host tier
+    swap_ins: int = 0                   # pages refaulted back to device
 
 
 class ServeEngine:
@@ -85,7 +92,9 @@ class ServeEngine:
                  extra_batch: Optional[dict] = None, eos_id: int = -1,
                  admission_gate: Optional[Callable] = None,
                  seed: int = 0, obs=None, obs_tenant: str = "serve",
-                 chunk_tokens: int = 0):
+                 chunk_tokens: int = 0, share_prefix: bool = False,
+                 prefix_capacity_pages: Optional[int] = None,
+                 swap: bool = False, transfer=None):
         self.cfg = cfg
         self.model = model
         self.B = batch_size
@@ -101,6 +110,18 @@ class ServeEngine:
         # prompt at once, so they stay monolithic.
         self.chunk_tokens = int(chunk_tokens)
         self._chunked = self.chunk_tokens > 0 and not self.extra_batch
+        # prefix sharing rides on chunked prefill (a warm admission
+        # starts the chunk cursor past the shared span — the monolithic
+        # path has no cursor to start anywhere)
+        self._share = share_prefix and self._chunked
+        # swap tier: under admission pressure a victim slot is parked
+        # (pages → host) instead of the newcomer being deferred/denied
+        self._swap = swap and self._chunked
+        self._parked: dict = {}           # slot → saved decode position
+        # slots parked mid-step, after their token was emitted but
+        # before its KV write: on resume that token feeds decode once
+        # more for the write but must not be emitted twice
+        self._emitted_parked: set = set()
         # telemetry hub: request-lifecycle spans (queued → admitted →
         # prefill → decode × N → done/deferred) land in obs.tracer under
         # the ``obs_tenant`` label; disabled hub → one attr check per site
@@ -129,7 +150,9 @@ class ServeEngine:
         self.kv = PagedKVCache(cfg, model, batch_size, capacity,
                                page_size=page_size, pool=pool,
                                auditor=auditor, enc_len=enc_len,
-                               obs=self.obs)
+                               obs=self.obs, share_prefix=self._share,
+                               prefix_capacity_pages=prefix_capacity_pages,
+                               swap=self._swap, transfer=transfer)
         self._logits: Optional[np.ndarray] = None    # (B, V*) host copy
         # chunked-prefill bookkeeping: cursor = prompt tokens written so
         # far (-1 = not prefilling); _next = sampled-but-unemitted token
@@ -202,8 +225,13 @@ class ServeEngine:
                          else plen)
             n_pages = max(1, -(-lease_len // self.kv.page_size))
             live = any(s is not None for s in self.slots)
-            if (self.admission_gate is not None and live
-                    and not self.admission_gate(owner, n_pages)):
+            gated = (self.admission_gate is not None and live
+                     and not self.admission_gate(owner, n_pages))
+            if gated and self._swap and self._swap_out_victim():
+                # swap-before-deny: parking a victim freed its private
+                # pages — re-ask the gate before deferring the newcomer
+                gated = not self.admission_gate(owner, n_pages)
+            if gated:
                 # pool pressure: defer the newcomer before touching the
                 # MMU. Advisory only — with no live slot (nothing will
                 # ever free a page) we fall through to the lease attempt
@@ -216,8 +244,20 @@ class ServeEngine:
                 with self._lock:
                     self.waiting.appendleft(req)
                 break
+            prompt = req.prompt if self._share else None
             try:
-                self.kv.admit(i, owner, plen, lease_len=lease_len)
+                try:
+                    shared = self.kv.admit(i, owner, plen,
+                                           lease_len=lease_len,
+                                           prompt=prompt)
+                except MMUError:
+                    # swap-before-deny, MMU flavor: the lease bounced on
+                    # a dry pool — park a victim and retry once
+                    if not (self._swap and self._swap_out_victim()):
+                        raise
+                    shared = self.kv.admit(i, owner, plen,
+                                           lease_len=lease_len,
+                                           prompt=prompt)
             except MMUError as exc:
                 # pool exhausted / quota: requeue at the front, retry
                 # next step once EOS recycling returns pages
@@ -233,18 +273,24 @@ class ServeEngine:
                     # exhaustion instead of busy-spinning run_round()
                     raise
                 break
+            if shared:
+                self.stats.shared_prefix_hits += 1
+                self.stats.shared_prefix_tokens += shared
             if self.obs.enabled:
                 self.obs.tracer.event(self.obs_tenant, req.rid,
                                       PHASE_ADMITTED, slot=i,
-                                      pages=self.kv.tables[i].n_pages)
+                                      pages=self.kv.tables[i].n_pages,
+                                      shared_tokens=shared)
             if self._chunked:
                 # admitted immediately with a prefill cursor; the chunk
                 # scheduler writes the prompt across subsequent steps
                 # while occupied slots keep decoding. positions stays -1
-                # (dead for decode) until the last chunk lands.
+                # (dead for decode) until the last chunk lands. A warm
+                # admission starts past the shared span — those tokens'
+                # KV pages are already resident and mapped.
                 self.slots[i] = req
                 self.positions[i] = -1
-                self._cursor[i] = 0
+                self._cursor[i] = shared
                 self.stats.admitted += 1
                 self.stats.pages_leased += self.kv.tables[i].n_pages
                 continue
@@ -326,8 +372,11 @@ class ServeEngine:
             before = self.kv.tables[i].n_pages
             try:
                 # incremental leasing: fault in the pages this chunk
-                # spans (admission only leased the first chunk's worth)
-                self.kv.ensure(i, start + c - 1)
+                # spans (admission only leased the first chunk's worth).
+                # write_from=start makes the whole chunk window privately
+                # writable — a warm request writing past its shared span
+                # into a partially-filled shared page CoW-forks it here.
+                self.kv.ensure(i, start + c - 1, write_from=start)
                 grown = self.kv.tables[i].n_pages - before
                 self.stats.page_faults += grown
                 self.stats.pages_leased += grown
@@ -358,13 +407,103 @@ class ServeEngine:
                 self._cursor[i] = -1
                 self.positions[i] = plen
                 self.stats.prefills += 1
+                if self._share:
+                    # publish the finished prompt's pages so future
+                    # requests with this prefix admit warm
+                    self.kv.register_prefix(i, req.prompt)
                 if self.obs.enabled:
                     self.obs.tracer.event(self.obs_tenant, req.rid,
                                           PHASE_PREFILL, tokens=plen)
 
+    # ------------------------------------------------------------------
+    # Swap tier: park a victim slot under pressure, resume when calm
+    # ------------------------------------------------------------------
+    def _swap_out_victim(self, exclude=None, mid_step: bool = False
+                         ) -> bool:
+        """Suspend one decoding slot: move its private pages to the host
+        tier and mark it parked (positions → -1, saved for resume). The
+        victim is the decoder holding the most pages — the biggest
+        single relief. Returns True if any pages actually moved."""
+        candidates = [j for j in range(self.B)
+                      if self.slots[j] is not None and j != exclude
+                      and j not in self._parked
+                      and self.positions[j] >= 0 and self._cursor[j] < 0]
+        candidates.sort(key=lambda j: self.kv.tables[j].n_pages,
+                        reverse=True)
+        for j in candidates:
+            if self._park(j, mid_step=mid_step):
+                return True
+        return False
+
+    def _park(self, j: int, mid_step: bool = False) -> bool:
+        """Suspend slot ``j``: private pages to the host tier, decode
+        position saved. False if nothing moved (fully shared slot)."""
+        moved = self.kv.swap_out(j)
+        if moved == 0:
+            return False                 # fully shared slot: no relief
+        self._parked[j] = int(self.positions[j])
+        if mid_step:
+            self._emitted_parked.add(j)
+        self.positions[j] = -1
+        self.stats.swap_outs += moved
+        if self.obs.enabled:
+            self.obs.tracer.event(self.obs_tenant, self.slots[j].rid,
+                                  PHASE_SWAP_OUT, pages=moved)
+            self.obs.flight_record(
+                self.obs_tenant, "kv_swap_out",
+                {"slot": j, "pages": moved, "rid": self.slots[j].rid})
+        return True
+
+    def _try_resume(self):
+        """Refault the oldest parked slot back in once the pool can hold
+        it again. Newcomers keep priority: while the queue is non-empty
+        and a free slot exists, the pages go to admissions first —
+        mid-decode ensure() truncation guarantees forward progress, so
+        parked slots can never deadlock the engine."""
+        if not self._parked:
+            return
+        if self.waiting and any(s is None for s in self.slots):
+            return
+        ms = self.kv.pool.memory_stats()
+        free = ms["segments_total"] - ms["segments_in_use"]
+        idle = not self.waiting and all(
+            self.slots[j] is None or j in self._parked
+            for j in range(self.B))
+        for j in sorted(self._parked):
+            need = self.kv.swapped_blocks(j)
+            # reserve the growth page when the pending write position
+            # sits past the table — resuming into an exactly-full pool
+            # would re-park the slot at once without emitting anything
+            if (self._parked[j] // self.kv.page_size
+                    >= self.kv.tables[j].n_pages):
+                need += 1
+            if need > free:
+                if not (idle and self.kv.prefix is not None
+                        and len(self.kv.prefix)):
+                    continue
+                # only parked slots remain and prefix-cache pins hold
+                # the pool: shed them — liveness beats cache warmth
+                self.kv.prefix.evict_all()
+                ms = self.kv.pool.memory_stats()
+                free = ms["segments_total"] - ms["segments_in_use"]
+                if need > free:
+                    continue
+            n = self.kv.swap_in(j)
+            self.positions[j] = self._parked.pop(j)
+            self.stats.swap_ins += n
+            if self.obs.enabled:
+                self.obs.tracer.event(self.obs_tenant, self.slots[j].rid,
+                                      PHASE_REFAULT, pages=n)
+                self.obs.flight_record(
+                    self.obs_tenant, "kv_refault",
+                    {"slot": j, "pages": n, "rid": self.slots[j].rid})
+            return                       # one resume per step
+
     def _finish(self, i, finished):
         r = self.slots[i]
         r.done = True
+        self._parked.pop(i, None)
+        self._emitted_parked.discard(i)
         self.slots[i] = None                      # recycle the slot
         self.positions[i] = -1
         self._cursor[i] = -1
@@ -394,10 +533,22 @@ class ServeEngine:
         return finished
 
     def _step(self, params) -> List[Request]:
+        # CoW forks fire inside kv.ensure() at several call sites; take
+        # the per-step delta so ``eng.stats = EngineStats()`` resets
+        # cleanly (the benchmark idiom) while kv keeps monotonic counts
+        cf0 = self.kv.cow_forks
+        try:
+            return self._step_body(params)
+        finally:
+            self.stats.cow_forks += self.kv.cow_forks - cf0
+
+    def _step_body(self, params) -> List[Request]:
         finished: List[Request] = []
         self._admit(params)
         if self._chunked:
             self._prefill_chunks(params)
+        if self._swap:
+            self._try_resume()
         # mid-prefill slots (positions -1) occupy a slot but don't emit
         active = [i for i in range(self.B) if self.slots[i] is not None
                   and self.positions[i] >= 0]
@@ -409,6 +560,14 @@ class ServeEngine:
         token = np.zeros((self.B, 1), np.int32)
         for i in active:
             r = self.slots[i]
+            if i in self._emitted_parked:
+                # first step after a mid-step park resumed: _next[i] was
+                # already emitted in the step that parked this slot —
+                # feed it to decode for its pending KV write, once,
+                # without emitting it a second time
+                self._emitted_parked.discard(i)
+                token[i, 0] = int(nxt[i])
+                continue
             if len(r.out_tokens) >= r.max_new_tokens:   # zero-budget case
                 self._finish(i, finished)
                 continue
@@ -424,13 +583,29 @@ class ServeEngine:
                 self._finish(i, finished)               # KV budget: truncate
         for i in [i for i in range(self.B) if self.slots[i] is not None
                   and self.positions[i] >= 0]:
+            if self.positions[i] < 0:
+                continue      # parked by an earlier slot's swap relief
             # demand paging — counters track engine-local deltas, never
             # the pool-global ones (a shared --virtualized tenant pool
             # serves other engines too); demand-grown pages count as
             # leased so pages_leased/pages_freed balance at EOS
             before = self.kv.tables[i].n_pages
             try:
-                self.kv.ensure(i, int(self.positions[i]))
+                try:
+                    self.kv.ensure(i, int(self.positions[i]))
+                except MMUError:
+                    if not self._swap:
+                        raise
+                    # swap relief: park another decoder so this slot's
+                    # page fault can be served; with no other decoder to
+                    # shed, suspend this slot itself — it resumes (and
+                    # completes its pending KV write) once pages free up
+                    if self._swap_out_victim(exclude=i, mid_step=True):
+                        self.kv.ensure(i, int(self.positions[i]))
+                    elif self._park(i, mid_step=True):
+                        continue
+                    else:
+                        raise
                 grown = self.kv.tables[i].n_pages - before
                 self.stats.page_faults += grown
                 self.stats.pages_leased += grown

@@ -1,0 +1,83 @@
+"""HostSwapTier — host-memory backing store for swapped KV pages.
+
+The third level of the KV page hierarchy (HBM frames → refcounted
+sharing → host memory): under sustained admission pressure the engine
+suspends a victim slot, copies its privately held pages device→host
+through the :class:`~repro.core.shell.TransferEngine` (so DMA bytes and
+stage timings land in the same accounting as every other host↔device
+move), and releases the frames back to the MMU. The block-table entries
+are marked swapped; ``PagedKVCache``'s refault path pages them back in
+on resume — oversubscribing the device by spilling state across the
+host boundary instead of denying admission.
+
+Payloads are keyed ``(page_table_handle, logical_block)``: handles are
+never reused across leases, so a stale payload can never be refaulted
+into a different request's pages.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.shell import TransferEngine
+
+
+class HostSwapTier:
+    """Keyed host store of KV page payloads (flat leaf lists)."""
+
+    def __init__(self, transfer: TransferEngine = None, obs=None):
+        self.transfer = transfer if transfer is not None \
+            else TransferEngine(mode="vm_nocopy")
+        self.obs = obs
+        self._store: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        self.bytes_stored = 0
+        self.peak_bytes = 0
+        self.puts = 0
+        self.pops = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def put(self, key: Tuple[int, int], device_leaves) -> int:
+        """Device→host copy of one page's leaves; returns bytes moved."""
+        host = [self.transfer.d2h(a) for a in device_leaves]
+        nbytes = sum(a.nbytes for a in host)
+        self._store[key] = host
+        self.puts += 1
+        self.bytes_stored += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.bytes_stored)
+        if self.obs is not None and self.obs.enabled:
+            self.obs.count("kv_swap_bytes_total", nbytes)
+        return nbytes
+
+    def pop(self, key: Tuple[int, int]):
+        """Take a payload out of the tier (None if absent — e.g. a
+        mapping-only test without device arrays)."""
+        host = self._store.pop(key, None)
+        if host is not None:
+            self.pops += 1
+            self.bytes_stored -= sum(a.nbytes for a in host)
+        return host
+
+    def load(self, host_leaves: List[np.ndarray]):
+        """Host→device for a popped payload (the refault data move)."""
+        return [self.transfer.h2d(a) for a in host_leaves]
+
+    def drop(self, handle: int) -> int:
+        """Discard every payload of a released page table (EOS while
+        suspended / aborted mid-swap). Returns payloads dropped."""
+        stale = [k for k in self._store if k[0] == handle]
+        for k in stale:
+            self.bytes_stored -= sum(a.nbytes for a in self._store[k])
+            del self._store[k]
+        return len(stale)
+
+    def stats(self) -> dict:
+        return {
+            "payloads": len(self._store),
+            "bytes_stored": self.bytes_stored,
+            "peak_bytes": self.peak_bytes,
+            "puts": self.puts,
+            "pops": self.pops,
+        }

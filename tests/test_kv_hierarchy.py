@@ -1,0 +1,392 @@
+"""KV page hierarchy (PR 8): refcounted prefix sharing, copy-on-write,
+and the host-memory swap tier.
+
+Pool-level: frame refcount lifecycle (never negative, freed exactly at
+the last ref drop — a hypothesis sweep over random share/fork/pin/free
+interleavings), CoW fork remapping only the forker. Cache-level: the
+hash-chained prefix cache pins frames past owner EOS and frees them on
+eviction. Engine-level: warm admissions map shared pages and generate
+byte-identical outputs, CoW isolates writers, swap/refault round-trips
+KV bytes exactly, and a pressured pool with swap enabled completes every
+request with outputs identical to an unpressured run — plus the obs
+counters and span phases the telemetry plane promises."""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to seeded-random sweeps
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.mmu import SWAPPED, OutOfMemory, SegmentPool
+from repro.models import build_model
+from repro.obs import ObsHub, PHASE_REFAULT, PHASE_SWAP_OUT
+from repro.serving import ServeEngine
+from repro.serving.prefix_cache import PrefixCache
+
+CFG = get_config("qwen1.5-0.5b", reduced=True)
+SEG = 1 << 12
+
+
+def _pool(n_segs):
+    return SegmentPool(total_bytes=n_segs * SEG, backend="bitmap",
+                       segment_bytes=SEG)
+
+
+# ===========================================================================
+# MMU frame refcounts: the invariants everything above relies on
+# ===========================================================================
+
+def test_frame_freed_exactly_at_last_ref_drop():
+    """A frame shared by three tables survives the first two frees and
+    is returned to the pool exactly when the last ref drops."""
+    pool = _pool(8)
+    base = pool.alloc_pages(2, "a")
+    shared = list(base.pages)
+    t1 = pool.alloc_pages(1, "b", shared_prefix=shared)
+    t2 = pool.alloc_pages(0, "c", shared_prefix=shared)
+    assert all(pool.frame_ref(p) == 3 for p in shared)
+
+    pool.free_pages(base.handle, "a")
+    assert all(pool.frame_ref(p) == 2 for p in shared)
+    pool.free_pages(t1.handle, "b")          # also drops t1's private page
+    assert all(pool.frame_ref(p) == 1 for p in shared)
+    assert pool.memory_stats()["segments_in_use"] == 2
+    pool.free_pages(t2.handle, "c")
+    assert pool.memory_stats()["segments_in_use"] == 0
+    assert pool.refcounts_consistent()
+
+
+def test_fork_page_remaps_only_the_forker():
+    pool = _pool(8)
+    base = pool.alloc_pages(2, "a")
+    t2 = pool.alloc_pages(1, "b", shared_prefix=list(base.pages))
+    shared0 = base.pages[0]
+    assert pool.frame_ref(shared0) == 2
+
+    old, new = pool.fork_page(t2.handle, "b", 0)
+    assert old == shared0 and new != old
+    assert t2.pages[0] == new                # forker remapped …
+    assert base.pages[0] == shared0          # … sharer untouched
+    assert pool.frame_ref(shared0) == 1 and pool.frame_ref(new) == 1
+    assert pool.refcounts_consistent()
+    pool.free_pages(t2.handle, "b")
+    pool.free_pages(base.handle, "a")
+    assert pool.memory_stats()["segments_in_use"] == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_refcount_lifecycle_random_interleavings(seed):
+    """Random share/fork/pin/swap/free interleavings: refcounts stay
+    consistent (never negative, frames_in_use matches the refmap) after
+    every op, and tearing everything down empties the pool."""
+    rng = np.random.default_rng(seed)
+    pool = _pool(24)
+    base = pool.alloc_pages(int(rng.integers(1, 4)), "base")
+    tables = [("base", base)]
+    pins = []
+    for i in range(int(rng.integers(1, 5))):
+        k = int(rng.integers(0, base.n_pages + 1))
+        try:
+            t = pool.alloc_pages(int(rng.integers(1, 3)), f"t{i}",
+                                 shared_prefix=list(base.pages[:k]) or None)
+        except OutOfMemory:
+            break
+        tables.append((f"t{i}", t))
+        assert pool.refcounts_consistent()
+    for _ in range(int(rng.integers(0, 10))):
+        op = int(rng.integers(0, 4))
+        owner, t = tables[int(rng.integers(0, len(tables)))]
+        blk = int(rng.integers(0, t.n_pages))
+        page = t.pages[blk]
+        if page == SWAPPED:
+            if op == 0:
+                pool.swap_in_page(t.handle, owner, blk)
+        elif op == 0 and pool.frame_ref(page) > 1:
+            try:
+                pool.fork_page(t.handle, owner, blk)
+            except OutOfMemory:
+                break
+        elif op == 1:
+            pool.retain_frame(page)
+            pins.append(page)
+        elif op == 2 and pool.frame_ref(page) == 1:
+            pool.swap_out_page(t.handle, owner, blk)
+        assert pool.refcounts_consistent()
+    for p in pins:
+        pool.release_frame(p, owner="pin")
+        assert pool.refcounts_consistent()
+    order = list(range(len(tables)))
+    rng.shuffle(order)
+    for idx in order:
+        owner, t = tables[idx]
+        pool.free_pages(t.handle, owner)
+        assert pool.refcounts_consistent()
+    assert pool.memory_stats()["segments_in_use"] == 0
+
+
+# ===========================================================================
+# PrefixCache: pins survive the owner's EOS, eviction frees
+# ===========================================================================
+
+def test_prefix_cache_pins_survive_owner_free():
+    pool = _pool(8)
+    table = pool.alloc_pages(2, "a")
+    pages = list(table.pages)
+    pc = PrefixCache(pool, 8)
+    prompt = np.arange(16, dtype=np.int32)
+    assert pc.insert(prompt, pages) == 2
+
+    pool.free_pages(table.handle, "a")       # owner EOS: pins hold on
+    assert pool.memory_stats()["segments_in_use"] == 2
+    probe = np.concatenate([prompt, np.arange(5, dtype=np.int32)])
+    shared, frames = pc.lookup(probe, max_tokens=len(probe) - 1)
+    assert shared == 16 and frames == pages
+    # different history, same length: the hash chain must not match
+    assert pc.lookup(probe + 1, max_tokens=len(probe) - 1)[0] == 0
+
+    assert pc.evict_all() == 2               # dropping pins frees frames
+    assert pool.memory_stats()["segments_in_use"] == 0
+    assert pc.lookup(probe, max_tokens=len(probe) - 1)[0] == 0
+
+
+# ===========================================================================
+# Engine: warm admission, CoW isolation, swap exactness
+# ===========================================================================
+
+def _family_prompts(n=3, prefix_tokens=16):
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, CFG.vocab, size=(prefix_tokens,))
+    return [np.concatenate([prefix,
+                            rng.integers(0, CFG.vocab, size=(5 + j,))])
+            .astype(np.int32) for j in range(n)]
+
+
+def test_warm_admission_shares_pages_and_matches_cold(rng_key):
+    """Requests sharing a 2-page prefix, submitted sequentially so each
+    sees the previous one's published pages: identical greedy outputs
+    with sharing on/off, fewer prefill chunks, CoW forks fired (the
+    pinned partial tail makes the first decode write hit refcount 2),
+    and the sharing obs counter recorded."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    prompts = _family_prompts()
+    outs, chunks = {}, {}
+    for share in (False, True):
+        hub = ObsHub(enabled=True)
+        eng = ServeEngine(CFG, model, 2, 64, page_size=8, chunk_tokens=8,
+                          share_prefix=share, obs=hub, obs_tenant="t")
+        rids = []
+        for p in prompts:                    # sequential: prefix must be
+            rids.append(eng.submit(p, max_new_tokens=4,   # published first
+                                   temperature=0.0))
+            eng.run_round(params)
+        outs[share] = [eng.completed[r].out_tokens for r in rids]
+        chunks[share] = eng.stats.prefill_chunks
+        if share:
+            assert eng.stats.shared_prefix_hits == 2
+            assert eng.stats.shared_prefix_tokens == 32    # 2 × 2 pages
+            assert eng.stats.cow_forks > 0
+            assert eng.kv.no_double_mapping()
+            assert eng.kv.prefix.stats()["entries"] > 0
+            snap = hub.registry.snapshot()
+            assert "kv_shared_pages_total" in snap["counters"]
+            assert "kv_cow_forks_total" in snap["counters"]
+    assert outs[True] == outs[False]
+    assert chunks[True] < chunks[False]
+    # after EOS only the prefix pins hold frames; shedding them must
+    # drain the pool completely — no leaked refs from shared mappings
+    assert eng.kv.pool.refcounts_consistent()
+    eng.kv.prefix.evict_all()
+    assert eng.kv.memory_stats()["segments_in_use"] == 0
+
+
+def test_swap_roundtrip_restores_kv_bytes_exactly(rng_key):
+    """Park a decoding slot (device→host gather), resume it (host→
+    device scatter): every KV page byte-identical, the host tier empty
+    afterwards, and generation completes as if nothing happened."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    prompt = (np.arange(20) % CFG.vocab).astype(np.int32)
+
+    ref = ServeEngine(CFG, model, 2, 64, page_size=8, chunk_tokens=8)
+    r_ref = ref.submit(prompt, max_new_tokens=6, temperature=0.0)
+    ref.run_round(params)
+
+    eng = ServeEngine(CFG, model, 2, 64, page_size=8, chunk_tokens=8,
+                      swap=True)
+    rid = eng.submit(prompt, max_new_tokens=6, temperature=0.0)
+    while eng.stats.prefills == 0:           # prefill + first token
+        eng.step(params)
+    kv = eng.kv
+    pages = list(kv.tables[0].pages)
+    before = [jax.device_get(kv._gather_fn(kv.state, np.int32(p)))
+              for p in pages]
+
+    in_use0 = kv.memory_stats()["segments_in_use"]
+    assert eng._park(0)
+    assert kv.swapped_blocks(0) == len(pages)
+    assert len(kv.swap_tier) == len(pages)
+    assert kv.memory_stats()["segments_in_use"] == in_use0 - len(pages)
+    assert eng.positions[0] == -1
+
+    eng._try_resume()
+    assert 0 not in eng._parked and eng.positions[0] >= 0
+    assert len(kv.swap_tier) == 0
+    after = [jax.device_get(kv._gather_fn(kv.state,
+                                          np.int32(kv.tables[0].pages[b])))
+             for b in range(len(pages))]
+    for b, (x, y) in enumerate(zip(before, after)):
+        for lx, ly in zip(jax.tree_util.tree_leaves(x),
+                          jax.tree_util.tree_leaves(y)):
+            assert np.array_equal(np.asarray(lx), np.asarray(ly)), \
+                f"page {b} KV bytes changed across the swap round-trip"
+
+    eng.run_round(params)
+    assert eng.completed[rid].out_tokens == ref.completed[r_ref].out_tokens
+    assert eng.stats.swap_outs == eng.stats.swap_ins == len(pages)
+
+
+def test_swap_pressure_outputs_exact_and_complete(rng_key):
+    """A pool at ~28% of the working set with swap on: every request
+    still gets its full token budget, outputs byte-identical to an
+    unpressured run (denials became swaps, not truncations), and the
+    telemetry plane saw the whole thing."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, CFG.vocab, size=(24,)).astype(np.int32)
+               for _ in range(6)]
+
+    def run(pool_pages, swap, hub=None):
+        kw = {}
+        if pool_pages is not None:
+            pb = model.kv_page_bytes(8)
+            kw["pool"] = SegmentPool(total_bytes=pool_pages * pb,
+                                     backend="bitmap", segment_bytes=pb)
+        eng = ServeEngine(CFG, model, 4, 64, page_size=8, chunk_tokens=32,
+                          swap=swap, obs=hub, obs_tenant="t", **kw)
+        rids = [eng.submit(p, max_new_tokens=12, temperature=0.0)
+                for p in prompts]
+        eng.run_round(params)
+        return [eng.completed[r].out_tokens for r in rids], eng
+
+    ref, _ = run(None, swap=False)
+    hub = ObsHub(enabled=True)
+    got, eng = run(9, swap=True, hub=hub)    # 9 pages vs 32-page full set
+
+    assert got == ref
+    assert all(len(o) == 12 for o in got)
+    assert eng.stats.swap_outs > 0 and eng.stats.swap_ins > 0
+    assert eng.stats.swap_outs == eng.stats.swap_ins   # all parked resumed
+    assert len(eng.kv.swap_tier) == 0
+    assert eng.kv.pool.refcounts_consistent()
+    assert eng.kv.memory_stats()["segments_in_use"] == 0
+
+    snap = hub.registry.snapshot()
+    for c in ("kv_swapped_pages_total", "kv_refaults_total",
+              "kv_swap_bytes_total"):
+        assert c in snap["counters"], f"missing counter {c}"
+    for h in ("kv_swap_out_s", "kv_refault_s"):
+        assert h in snap["histograms"], f"missing histogram {h}"
+    phases = [ph for s in hub.tracer.spans("t") for ph in s.phases()]
+    assert PHASE_SWAP_OUT in phases and PHASE_REFAULT in phases
+
+
+# ===========================================================================
+# Control plane: swap-before-deny hooks
+# ===========================================================================
+
+def _pool_tenant(name, n_segs=8):
+    from repro.core.shell import CompletionQueue
+    from repro.core.tenant import Tenant
+    t = Tenant(name=name, vslice=None,
+               pool=SegmentPool(total_bytes=n_segs * SEG,
+                                segment_bytes=SEG),
+               cq=CompletionQueue())
+    return t
+
+
+def _slo_plane(**kw):
+    from repro.core.interposition import OpLog
+    from repro.core.scheduler import make_data_plane
+    return make_data_plane("slo", oplog=OpLog(),
+                           pressure_refresh_s=0.0, deny_hold_s=0.0, **kw)
+
+
+def test_slo_relief_cb_converts_denial_to_admission():
+    """Hard MMU pressure that would deny admission instead asks the
+    relief hook (the engine's swap path) to shed pages; when it
+    succeeds the op is admitted and accounted as pressure_relieved."""
+    state = {}
+
+    def relief(name):
+        state["asked"] = name
+        t.pool.free(state["lease"].handle, "hog")    # swap freed pages
+        return True
+
+    p = _slo_plane(relief_cb=relief)
+    t = _pool_tenant("hog")
+    p.register(t)
+    try:
+        state["lease"] = t.pool.alloc(8 * SEG, "hog")  # occupancy 1.0
+        assert p.submit(t, "run", lambda: 7, {}).result(timeout=5) == 7
+        assert state["asked"] == "hog"
+        s = p.stats()["tenants"]["hog"]
+        assert s["pressure_relieved"] == 1
+        assert s["admission_denied"] == 0
+    finally:
+        p.shutdown()
+
+
+def test_slo_relief_cb_failure_still_denies():
+    from repro.core.scheduler import AdmissionPressure
+    p = _slo_plane(relief_cb=lambda name: False)
+    t = _pool_tenant("hog")
+    p.register(t)
+    try:
+        t.pool.alloc(8 * SEG, "hog")
+        fut = p.submit(t, "run", lambda: 7, {})
+        assert isinstance(fut.exception(timeout=5), AdmissionPressure)
+        s = p.stats()["tenants"]["hog"]
+        assert s["pressure_relieved"] == 0 and s["admission_denied"] == 1
+    finally:
+        p.shutdown()
+
+
+def test_autoscaler_swap_relief_replaces_grow_blocked(tmp_path,
+                                                      monkeypatch):
+    """A full floorplan with a swap hook: the blocked grow becomes a
+    swap_relief action (tenant keeps serving at its old shape) instead
+    of grow_blocked; a failing hook falls back to grow_blocked."""
+    from test_elastic import _patch_mesh, fake_vmm
+    from repro.core.autoscaler import Autoscaler
+    from repro.core.scheduler import IRQ_DEGRADED
+
+    _patch_mesh(monkeypatch)
+    vmm = fake_vmm(tmp_path, rows=2, cols=2)
+    t = vmm.create_vm("a", (1, 1))
+    for i in range(3):                       # fill the rest of the grid
+        vmm.create_vm(f"filler{i}", (1, 1))
+    clk = {"t": 0.0}
+    asked = []
+    scaler = Autoscaler(vmm, sustain=1, window_s=5.0, cooldown_s=0.0,
+                        time_fn=lambda: clk["t"],
+                        swap_cb=lambda n: asked.append(n) or True)
+    scaler.watch(t)
+    t.cq.raise_event(IRQ_DEGRADED, "queue_buildup", {"depth": 9})
+    acts = scaler.poll()
+    assert [a["action"] for a in acts] == ["swap_relief"]
+    assert asked == ["a"]
+    assert t.vslice.spec.shape == (1, 1)     # tenant intact, still serving
+
+    blocked = Autoscaler(vmm, sustain=1, window_s=5.0, cooldown_s=0.0,
+                         time_fn=lambda: clk["t"],
+                         swap_cb=lambda n: False)
+    blocked.watch(t)
+    t.cq.raise_event(IRQ_DEGRADED, "queue_buildup", {"depth": 9})
+    acts = blocked.poll()
+    assert [a["action"] for a in acts] == ["grow_blocked"]

@@ -30,12 +30,18 @@ MEMORY_STATS_KEYS = {
     "segments_total", "segments_in_use", "pages_in_use", "page_tables",
     "page_faults", "pages_allocated", "pages_freed", "fragmentation",
     "quota_denials",
+    # KV page hierarchy (PR 8): refcounted sharing / CoW / swap tier
+    "frames_in_use", "shared_frames", "shared_maps", "cow_forks",
+    "swap_outs", "swap_ins", "swapped_pages",
 }
 
 ENGINE_STATS_FIELDS = {
     "steps", "decode_steps", "prefills", "full_prefills", "admitted",
     "deferred", "completed", "generated_tokens", "pages_leased",
     "pages_freed", "page_faults",
+    # KV page hierarchy (PR 8)
+    "shared_prefix_hits", "shared_prefix_tokens", "cow_forks",
+    "swap_outs", "swap_ins",
 }
 
 PLANE_TENANT_KEYS = {
@@ -47,6 +53,7 @@ PLANE_TENANT_KEYS = {
 SLO_TENANT_EXTRA_KEYS = {
     "slo_wait_ms", "slo_hits", "slo_misses", "slo_attainment",
     "p95_wait_ms", "mem_pressure", "admission_denied",
+    "pressure_relieved",
 }
 
 TRANSFER_STATS_KEYS = {
