@@ -1,12 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fairness bench bench-paged bench-prefill bench-slo bench-obs bench-kv
+.PHONY: test smoke fairness bench bench-paged bench-prefill bench-slo bench-obs bench-kv bench-mux
 
 test:            ## tier-1 verify
 	$(PY) -m pytest -x -q
 
-smoke: test fairness bench-paged bench-prefill bench-slo bench-obs bench-kv   ## tier-1 + quick benchmark checks
+smoke: test fairness bench-paged bench-prefill bench-slo bench-obs bench-kv bench-mux   ## tier-1 + quick benchmark checks
 
 fairness:        ## WFQ vs broker vs passthrough share table (quick)
 	$(PY) benchmarks/scheduler_fairness.py --quick
@@ -25,6 +25,9 @@ bench-obs:       ## telemetry-plane overhead budgets (disabled <1%, enabled <5%)
 
 bench-kv:        ## KV page hierarchy: warm-admission + swap-pressure gates
 	$(PY) benchmarks/kv_hierarchy.py --quick
+
+bench-mux:       ## model multiplexing: per-family tok/s + hot-swap gates
+	$(PY) benchmarks/model_mux.py --quick
 
 bench:           ## full benchmark harness (CSV)
 	$(PY) benchmarks/run.py

@@ -1,0 +1,290 @@
+"""Model multiplexing benchmark → BENCH_model_mux.json.
+
+One VMM-style host serves three model *families* concurrently —
+attention (qwen1.5-0.5b), RWKV-6 (rwkv6-7b) and RG-LRU
+(recurrentgemma-2b) — as registered weights-as-bitstreams over one
+shared MMU pool, and measures what the mux plane costs (``make
+bench-mux``, wired into ``make smoke``):
+
+* **per-family throughput vs single-model baselines** — the same trace
+  through a solo ``ServeEngine`` per family vs the 3-family
+  ``MuxEngine`` (per-family tok/s uses each lane's ``active_s`` wall
+  time so idle interleave gaps are not charged to the family). Gate:
+  no family drops below ``--family-floor`` (default 0.8×) of its solo
+  throughput.
+* **hot-swap latency** — a phased workload under ``max_resident=1``
+  forces every family change to reconfigure weights through the host
+  tier (CRC-verified swap-in); p50/p95 come from the
+  ``model_swap_in_s`` / ``model_swap_out_s`` obs histograms the
+  registry feeds. Gates: swaps actually happened and swap-in p95 stays
+  under ``--swap-p95-ceiling-ms``.
+* **zero output divergence** — greedy outputs per family are
+  byte-identical between the solo arm, the mixed arm, and the
+  post-hot-swap serves (a model that came back from the host tier must
+  serve the exact same tokens).
+
+    PYTHONPATH=src python benchmarks/model_mux.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+FAMILIES = ["qwen1.5-0.5b", "rwkv6-7b", "recurrentgemma-2b"]
+
+
+def build_family(name):
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(name, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_prompts(cfg, n, args, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab,
+                         size=(args.prompt_len
+                               + int(rng.integers(0, 4)),)).astype(np.int32)
+            for _ in range(n)]
+
+
+def outputs_in_order(done):
+    """Greedy outputs in submission order (rid order per engine)."""
+    return [tuple(r.out_tokens) for r in sorted(done, key=lambda r: r.rid)]
+
+
+def bench_solo(families, prompts, args, obs):
+    """Single-model baseline per family: same engine knobs (and the
+    same telemetry overhead) as the mux lanes, own pool, run the trace
+    alone. Returns tok/s + greedy outputs in submission order."""
+    from repro.serving.engine import EngineStats, ServeEngine
+
+    out = {}
+    for name, (cfg, model, params) in families.items():
+        eng = ServeEngine(cfg, model, args.batch, args.capacity,
+                          page_size=args.page_size,
+                          chunk_tokens=args.chunk_tokens,
+                          state_paging=True, obs=obs,
+                          obs_tenant=f"solo-{name}")
+        # dress rehearsal: compile every prefill-chunk/decode shape
+        for p in prompts[name]:
+            eng.submit(p, max_new_tokens=args.max_new)
+        eng.run_round(params)
+        eng.stats = EngineStats()
+        for p in prompts[name]:
+            eng.submit(p, max_new_tokens=args.max_new)
+        t0 = time.perf_counter()
+        done = eng.run_round(params)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        out[name] = {
+            "tok_s": toks / max(dt, 1e-9),
+            "tokens": toks,
+            "outputs": outputs_in_order(done),
+            "state_pages": eng.stats.state_pages_leased,
+        }
+        print(f"[model_mux] solo {name:18s}: {out[name]['tok_s']:8.1f} "
+              f"tok/s ({toks} tok, state pages "
+              f"{eng.stats.state_pages_leased})")
+    return out
+
+
+def bench_mux(mux, names, prompts, args):
+    """The mixed arm: all three families' traces submitted together,
+    one shared pool, per-family tok/s from lane-attributed wall time."""
+    from repro.serving.engine import EngineStats
+
+    def submit_all():
+        # interleave families so every mux sweep batches all lanes
+        for i in range(max(len(prompts[n]) for n in names)):
+            for name in names:
+                if i < len(prompts[name]):
+                    mux.submit(prompts[name][i], model=name,
+                               max_new_tokens=args.max_new)
+
+    submit_all()                        # dress rehearsal (compile)
+    mux.run_round()
+    for g in mux.groups.values():
+        g.engine.stats = EngineStats()
+        g.active_s, g.tokens = 0.0, 0
+        g.completed = g.submitted = 0
+
+    submit_all()
+    t0 = time.perf_counter()
+    finished = mux.run_round()
+    wall = time.perf_counter() - t0
+
+    out = {"wall_s": wall, "families": {}}
+    for name in names:
+        g = mux.groups[name]
+        out["families"][name] = {
+            "tok_s": g.tokens / max(g.active_s, 1e-9),
+            "tokens": g.tokens,
+            "active_s": g.active_s,
+            "completed": g.completed,
+            "outputs": outputs_in_order(finished.get(name, [])),
+            "state_swaps": (g.engine.stats.state_swap_outs,
+                            g.engine.stats.state_swap_ins),
+        }
+        print(f"[model_mux] mux  {name:18s}: "
+              f"{out['families'][name]['tok_s']:8.1f} tok/s "
+              f"({g.tokens} tok in {g.active_s:.2f}s active)")
+    return out
+
+
+def bench_hot_swap(mux, reg, names, prompts, solo, args):
+    """Phased single-family bursts under ``max_resident=1``: every
+    family change forces the incoming model's weights back from the
+    host tier through the CRC gate, on the real serving path
+    (``MuxEngine.step → registry.params → swap_in``)."""
+    reg.max_resident = 1
+    diverged = 0
+    for cycle in range(args.swap_cycles):
+        for name in names:
+            mux.submit(prompts[name][0], model=name,
+                       max_new_tokens=args.max_new)
+            done = mux.run_round().get(name, [])
+            want = solo[name]["outputs"][0]
+            got = tuple(done[0].out_tokens) if done else ()
+            if got != want:
+                diverged += 1
+                print(f"[model_mux] DIVERGED {name} cycle {cycle}: "
+                      f"{got} != {want}")
+    reg.max_resident = None
+    swap_ins = sum(reg[n].swap_ins for n in names)
+    swap_outs = sum(reg[n].swap_outs for n in names)
+    print(f"[model_mux] hot-swap churn: {swap_ins} swap-ins / "
+          f"{swap_outs} swap-outs over {args.swap_cycles} cycles, "
+          f"{diverged} diverged")
+    return {"swap_ins": swap_ins, "swap_outs": swap_outs,
+            "diverged": diverged}
+
+
+def swap_histograms(obs):
+    """Merge the per-model obs summaries into one p50/p95 per
+    direction (p95 = worst model — the gate is a ceiling)."""
+    snap = obs.registry.snapshot()
+    out = {}
+    for metric in ("model_swap_in_s", "model_swap_out_s"):
+        merged = {"p50_ms": 0.0, "p95_ms": 0.0, "count": 0}
+        for summ in snap.get("histograms", {}).get(metric, {}).values():
+            merged["p50_ms"] = max(merged["p50_ms"],
+                                   1e3 * summ.get("p50", 0.0))
+            merged["p95_ms"] = max(merged["p95_ms"],
+                                   1e3 * summ.get("p95", 0.0))
+            merged["count"] += summ.get("count", 0)
+        out[metric] = merged
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="requests per family in each arm")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--capacity", type=int, default=32)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--chunk-tokens", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--swap-cycles", type=int, default=3)
+    ap.add_argument("--family-floor", type=float, default=0.8,
+                    help="per-family mux tok/s floor vs the solo arm")
+    ap.add_argument("--swap-p95-ceiling-ms", type=float, default=400.0)
+    ap.add_argument("--out", default="BENCH_model_mux.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.requests = min(args.requests, 3)
+        args.swap_cycles = min(args.swap_cycles, 2)
+
+    from repro.obs import ObsHub
+    from repro.serving import ModelRegistry, MuxEngine
+
+    families = {name: build_family(name) for name in FAMILIES}
+    prompts = {name: make_prompts(families[name][0], args.requests,
+                                  args, seed=i)
+               for i, name in enumerate(FAMILIES)}
+
+    obs = ObsHub(enabled=True)
+    solo = bench_solo(families, prompts, args, obs)
+
+    reg = ModelRegistry(obs=obs)
+    for name, (cfg, model, params) in families.items():
+        # same model objects + params as the solo arm: identical
+        # weights and warm XLA caches, so the comparison isolates the
+        # mux machinery
+        reg.register(name, cfg=cfg, model=model, params=params)
+    mux = MuxEngine(reg, FAMILIES, batch_per_model=args.batch,
+                    capacity=args.capacity, page_size=args.page_size,
+                    chunk_tokens=args.chunk_tokens, obs=obs)
+    mixed = bench_mux(mux, FAMILIES, prompts, args)
+    churn = bench_hot_swap(mux, reg, FAMILIES, prompts, solo, args)
+    hs = swap_histograms(obs)
+
+    ratios = {name: (mixed["families"][name]["tok_s"]
+                     / max(solo[name]["tok_s"], 1e-9))
+              for name in FAMILIES}
+    mismatch = {name: sum(
+        a != b for a, b in zip(mixed["families"][name]["outputs"],
+                               solo[name]["outputs"]))
+        for name in FAMILIES}
+
+    results = {
+        "families": FAMILIES,
+        "solo": {n: {k: v for k, v in solo[n].items() if k != "outputs"}
+                 for n in FAMILIES},
+        "mux": {
+            "wall_s": mixed["wall_s"],
+            "families": {n: {k: v for k, v in
+                             mixed["families"][n].items()
+                             if k != "outputs"} for n in FAMILIES},
+        },
+        "tok_s_ratio": ratios,
+        "output_mismatches": mismatch,
+        "hot_swap": {**churn, **hs},
+        "registry": reg.stats(),
+        "pool": mux.pool.memory_stats(),
+        "config": {k: getattr(args, k) for k in
+                   ("requests", "batch", "capacity", "page_size",
+                    "chunk_tokens", "prompt_len", "max_new",
+                    "swap_cycles")},
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+
+    # ---- loud gates ------------------------------------------------------
+    p95_in = hs["model_swap_in_s"]["p95_ms"]
+    print(f"[model_mux] ratios "
+          + " ".join(f"{n}=×{r:.2f}" for n, r in ratios.items())
+          + f" (floor ×{args.family_floor}); hot-swap in "
+          f"p50 {hs['model_swap_in_s']['p50_ms']:.1f} ms "
+          f"p95 {p95_in:.1f} ms "
+          f"(ceiling {args.swap_p95_ceiling_ms} ms) → {args.out}")
+    for name, r in ratios.items():
+        assert r >= args.family_floor, (
+            f"{name} mux throughput ×{r:.2f} below the "
+            f"×{args.family_floor} single-model floor")
+    assert churn["swap_ins"] > 0 and churn["swap_outs"] > 0, \
+        "hot-swap churn never reconfigured — residency budget dead"
+    assert hs["model_swap_in_s"]["count"] > 0, \
+        "no model_swap_in_s observations — obs metering dead"
+    assert p95_in <= args.swap_p95_ceiling_ms, (
+        f"hot-swap-in p95 {p95_in:.1f} ms over the "
+        f"{args.swap_p95_ceiling_ms} ms ceiling")
+    assert churn["diverged"] == 0, \
+        "post-hot-swap outputs diverged — host-tier weights corrupted"
+    assert all(v == 0 for v in mismatch.values()), (
+        f"mux vs solo greedy outputs diverged: {mismatch}")
+    assert reg.stats()["crc_failures"] == 0
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.vslice import VSlice
 
@@ -76,6 +77,23 @@ class Bitfile:
 
     def verify_crc(self) -> bool:
         return self.crc == self._compute_crc()
+
+
+def weights_fingerprint(params) -> str:
+    """Content hash of a weights pytree — leaf paths, shapes, dtypes and
+    bytes. This is the ``slice_fingerprint`` of a weights-as-bitstream
+    :class:`Bitfile` (model multiplexing): the CRC commits to the actual
+    parameter bytes, so host-tier corruption of a swapped-out model is
+    caught at swap-in, not silently served."""
+    h = hashlib.blake2b(digest_size=8)
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
 
 
 @dataclass
@@ -147,12 +165,22 @@ class ProgramLoader:
         self.loaded: Dict[int, LoadedProgram] = {}   # slice_id → program
         self.auditor = auditor
         self.reconfigs = 0
+        self.crc_checks = 0
+        self.crc_failures = 0
 
-    def validate(self, bitfile: Bitfile, vslice: VSlice, owner: str = "?"):
+    def verify_bitfile(self, bitfile: Bitfile, owner: str = "?"):
+        """CRC-only verification (counted) — every load AND every
+        model-registry swap-in goes through here, so a corrupted
+        bitstream never reaches a slice or a serving engine silently."""
+        self.crc_checks += 1
         if not bitfile.verify_crc():
+            self.crc_failures += 1
             if self.auditor:
                 self.auditor.record("bitfile_crc_fail", owner, {})
             raise LegalityError("bitfile CRC check failed")
+
+    def validate(self, bitfile: Bitfile, vslice: VSlice, owner: str = "?"):
+        self.verify_bitfile(bitfile, owner)
         if bitfile.topology_key != vslice.topology_key:
             if self.auditor:
                 self.auditor.record("bitfile_topology_mismatch", owner,

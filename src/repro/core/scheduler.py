@@ -96,11 +96,13 @@ class TenantSchedStats:
     credit: float = 0.0          # WFQ virtual time; 0 for other planes
     weight: float = 1.0
     priority: int = PRIORITY_NORMAL
+    model: Optional[str] = None  # bound model family (multiplexing plane)
 
     def snapshot(self) -> dict:
         done = max(self.completed + self.failed, 1)
         return {
             "submitted": self.submitted,
+            "model": self.model,
             "completed": self.completed,
             "failed": self.failed,
             "queue_depth": self.queue_depth,
@@ -179,11 +181,13 @@ class DataPlane:
     def register(self, tenant, weight: float = 1.0,
                  priority: int = PRIORITY_NORMAL,
                  rate_limit_ops: float = 0.0,
-                 slo_wait_s: Optional[float] = None):
+                 slo_wait_s: Optional[float] = None,
+                 model: Optional[str] = None):
         with self._lock:
             e = _TenantEntry(tenant=tenant,
                              stats=TenantSchedStats(weight=weight,
-                                                    priority=priority),
+                                                    priority=priority,
+                                                    model=model),
                              weight=max(weight, 1e-6), priority=priority,
                              rate_limit=rate_limit_ops,
                              tokens=max(1.0, rate_limit_ops),

@@ -126,7 +126,8 @@ class VMM:
                   sched_weight: float = 1.0,
                   sched_priority: Optional[int] = None,
                   sched_rate_limit_ops: float = 0.0,
-                  sched_slo_wait_s: Optional[float] = None) -> Tenant:
+                  sched_slo_wait_s: Optional[float] = None,
+                  model: Optional[str] = None) -> Tenant:
         rec = self.oplog.begin(name, "admit", {"shape": slice_shape})
         vs = self.floorplanner.allocate(slice_shape)
         if vs is None:
@@ -149,6 +150,10 @@ class VMM:
             sched_kw["priority"] = sched_priority
         if sched_slo_wait_s is not None:
             sched_kw["slo_wait_s"] = sched_slo_wait_s
+        if model is not None:
+            # multiplexing plane: the tenant is bound to a registered
+            # model family at admission time
+            sched_kw["model"] = model
         with self._lock:
             self.tenants[name] = t
         self.plane.register(t, **sched_kw)
@@ -418,6 +423,8 @@ class VMM:
             "compile_hits": self.compiler.hits,
             "compile_misses": self.compiler.misses,
             "reconfigs": self.loader.reconfigs,
+            "crc_checks": self.loader.crc_checks,
+            "crc_failures": self.loader.crc_failures,
             "violations": self.auditor.summary(),
             "transfer": self.transfer.stats.__dict__,
             "oplog_records": len(self.oplog.records),

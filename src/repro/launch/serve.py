@@ -47,6 +47,17 @@ def main():
                          "pressure a victim slot's pages move to host "
                          "memory instead of the newcomer being deferred "
                          "(requires --chunk-tokens)")
+    ap.add_argument("--models", default="",
+                    help="comma-separated archs for multi-model serving "
+                         "on one shared pool (model multiplexing plane); "
+                         "overrides --arch and ignores --virtualized")
+    ap.add_argument("--max-resident", type=int, default=0,
+                    help="with --models: weight-residency budget — idle "
+                         "families past this count hot-swap their "
+                         "weights to the host tier (0 = unlimited)")
+    ap.add_argument("--mux-pool-pages", type=int, default=0,
+                    help="with --models: shared MMU pool size in pages "
+                         "(0 = auto-size so every family fits)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--virtualized", action="store_true")
     ap.add_argument("--policy", default="hybrid",
@@ -65,6 +76,10 @@ def main():
     from repro.serving import ServeEngine
 
     obs = ObsHub(enabled=args.metrics)
+
+    if args.models:
+        _serve_mux(args, obs)
+        return
 
     cfg = get_config(args.arch, reduced=not args.full)
     model = build_model(cfg)
@@ -183,6 +198,61 @@ def main():
     if args.virtualized:
         print("[serve] vmm stats:", vmm.stats())
         vmm.shutdown()
+
+
+def _serve_mux(args, obs):
+    """--models: one VMM-style host, several model families as
+    registered bitstreams, tenants bound per family, one shared pool."""
+    from repro.serving import ModelRegistry, MuxEngine
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    reg = ModelRegistry(obs=obs,
+                        max_resident=args.max_resident or None)
+    for name in names:
+        reg.register(name, reduced=not args.full)
+    mux = MuxEngine(reg, names, batch_per_model=args.batch,
+                    capacity=args.capacity, page_size=args.page_size,
+                    chunk_tokens=max(args.chunk_tokens, 8),
+                    pool_pages=args.mux_pool_pages or None, obs=obs)
+    rng = np.random.default_rng(0)
+    for i, name in enumerate(names):
+        mux.bind(f"tenant{i}", name)
+    for i in range(args.requests):
+        name = names[i % len(names)]
+        vocab = reg[name].cfg.vocab
+        plen = args.prompt_len + int(rng.integers(0, 8))
+        prompt = rng.integers(0, vocab, size=(plen,))
+        mux.submit(prompt, tenant=f"tenant{names.index(name)}",
+                   max_new_tokens=max(1, args.max_new - 4 * (i % 3)))
+    t0 = time.perf_counter()
+    finished = mux.run_round()
+    dt = time.perf_counter() - t0
+    s = mux.stats()
+    total = sum(g["tokens"] for g in s["groups"].values())
+    print(f"[mux] {len(names)} families, "
+          f"{sum(len(v) for v in finished.values())} requests, "
+          f"{total} tokens in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s)")
+    for name, g in s["groups"].items():
+        e = g["engine"]
+        print(f"[mux] {name}: {g['completed']} done, {g['tokens']} tok "
+              f"in {g['active_s']:.2f}s active; "
+              f"pages {e['pages_leased']}/{e['pages_freed']} "
+              f"state {e['state_pages_leased']}/{e['state_pages_freed']} "
+              f"swaps kv={e['swap_outs']}/{e['swap_ins']} "
+              f"state={e['state_swap_outs']}/{e['state_swap_ins']}")
+    r = s["registry"]
+    print(f"[mux] registry: {r['resident']}/{len(names)} resident "
+          f"(budget {r['max_resident']}), crc {r['crc_checks']} checks / "
+          f"{r['crc_failures']} failures")
+    for name, m in r["models"].items():
+        print(f"[mux]   {name}: resident={m['resident']} "
+              f"swap in/out={m['swap_ins']}/{m['swap_outs']} "
+              f"({m['param_bytes'] / 1e6:.1f} MB, crc {m['crc']})")
+    print(f"[mux] pool: {s['pool']}")
+    if args.metrics:
+        print("[obs] prometheus exposition:")
+        print(obs.prometheus())
 
 
 if __name__ == "__main__":

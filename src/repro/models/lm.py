@@ -227,6 +227,21 @@ def apply_layer_decode(cfg, spec, p, x, cache, ctx):
     pos = ctx["pos"]
     h = apply_norm(cfg, p["norm1"], x)
     new_cache = dict(cache)
+
+    # Paged serving: per-slot rows of *dead* slots (mid-prefill, parked;
+    # position -1) must keep their state — a recurrent update driven by
+    # the dead slot's placeholder token would corrupt the state its next
+    # prefill chunk (or swap refault) reads back. Attention K/V pages
+    # are immune: dead slots never have a write position.
+    live = ctx.get("positions") if ctx.get("block_tables") is not None \
+        else None
+
+    def keep_rows(old, new):
+        if live is None:
+            return new
+        m = live.reshape((-1,) + (1,) * (new.ndim - 1)) >= 0
+        return jnp.where(m, new.astype(old.dtype), old)
+
     if spec.mixer in ("attn", "swa"):
         window = cfg.window if spec.mixer == "swa" else 0
         if ctx.get("block_tables") is not None:       # paged serving path
@@ -238,11 +253,11 @@ def apply_layer_decode(cfg, spec, p, x, cache, ctx):
                 cfg, p["mixer"], h, cache["mixer"], pos, window=window,
                 mesh=ctx.get("mesh"))
     elif spec.mixer == "rglru":
-        y, new_cache["mixer"] = rec.rglru_decode(
-            cfg, p["mixer"], h, cache["mixer"])
+        y, mc = rec.rglru_decode(cfg, p["mixer"], h, cache["mixer"])
+        new_cache["mixer"] = jax.tree.map(keep_rows, cache["mixer"], mc)
     else:
-        y, new_cache["mixer"] = rec.rwkv_tmix_decode(
-            cfg, p["mixer"], h, cache["mixer"])
+        y, mc = rec.rwkv_tmix_decode(cfg, p["mixer"], h, cache["mixer"])
+        new_cache["mixer"] = jax.tree.map(keep_rows, cache["mixer"], mc)
     x = x + y.astype(x.dtype)
 
     if spec.cross:
@@ -254,8 +269,8 @@ def apply_layer_decode(cfg, spec, p, x, cache, ctx):
     if spec.ffn == "moe":
         y2, _ = moe_mod.apply_moe(cfg, p["ffn"], h2, mesh=ctx.get("mesh"))
     elif spec.ffn == "channelmix":
-        y2, new_cache["ffn"] = rec.channelmix_decode(
-            cfg, p["ffn"], h2, cache["ffn"])
+        y2, fc = rec.channelmix_decode(cfg, p["ffn"], h2, cache["ffn"])
+        new_cache["ffn"] = jax.tree.map(keep_rows, cache["ffn"], fc)
     else:
         y2 = apply_ffn(cfg, p["ffn"], h2, kind=spec.ffn)
     return x + y2.astype(x.dtype), new_cache
@@ -489,6 +504,82 @@ def scatter_kv_page(cfg, specs, state, page, leaves):
             return pool.at[:, page].set(leaf)
         return pool.at[page].set(leaf)
     return _map_kv_pools(cfg, specs, state, wr)
+
+
+def _state_row_keys(spec):
+    """Cache keys of ``spec`` whose paged-state leaves are per-slot rows
+    (batch-indexed) rather than shared K/V page pools: recurrent mixer
+    state (rg-lru h/conv, rwkv shift/s), cross-attn K/V, channelmix
+    shifts. Order is fixed — the gather/scatter leaf lists depend on it."""
+    keys = []
+    if spec.mixer not in ("attn", "swa"):
+        keys.append("mixer")
+    if spec.cross:
+        keys.append("cross")
+    if spec.ffn == "channelmix":
+        keys.append("ffn")
+    return keys
+
+
+def _state_row_sites(cfg, specs):
+    """Yield ``(si, li, keys, scan)`` for every layer holding per-slot
+    rows — the walk shared by the row gather/scatter/reset helpers."""
+    for si, entry in enumerate(build_layout(cfg, specs)):
+        scan = entry[0] != "unroll"
+        for li, spec in enumerate(entry[1]):
+            keys = _state_row_keys(spec)
+            if keys:
+                yield si, li, keys, scan
+
+
+def _map_state_rows(cfg, specs, state, fn):
+    """Rebuild ``state`` with ``fn(leaf, scan)`` applied to every
+    per-slot row leaf (K/V page pools untouched)."""
+    new_state = [list(seg) for seg in state]
+    for si, li, keys, scan in _state_row_sites(cfg, specs):
+        layer = dict(new_state[si][li])
+        for key in keys:
+            layer[key] = jax.tree.map(lambda a: fn(a, scan), layer[key])
+        new_state[si][li] = layer
+    return new_state
+
+
+def gather_state_row(cfg, specs, state, slot):
+    """Read slot ``slot``'s row out of every per-slot leaf → flat leaf
+    list (layer-major, sorted-key order within a layer) — the recurrent
+    paged-state swap tier's device→host read. Rows are (B, …) unrolled,
+    (n, B, …) under scan; the gathered leaves drop the batch axis."""
+    leaves = []
+    for si, li, keys, scan in _state_row_sites(cfg, specs):
+        for key in keys:
+            for leaf in jax.tree.leaves(state[si][li][key]):
+                leaves.append(leaf[:, slot] if scan else leaf[slot])
+    return leaves
+
+
+def scatter_state_row(cfg, specs, state, slot, leaves):
+    """Inverse of :func:`gather_state_row`: write the flat leaf list
+    back into slot ``slot``'s rows — the recurrent-state refault path."""
+    it = iter(leaves)
+
+    def wr(leaf, scan):
+        row = next(it)
+        if scan:
+            return leaf.at[:, slot].set(row.astype(leaf.dtype))
+        return leaf.at[slot].set(row.astype(leaf.dtype))
+    return _map_state_rows(cfg, specs, state, wr)
+
+
+def reset_state_row(cfg, specs, state, slot):
+    """Zero slot ``slot``'s per-slot rows — a fresh request admitted
+    into a recycled slot must not read the previous occupant's recurrent
+    state (chunked prefill reads rows as its initial state, so without
+    this a recycled slot leaks state across requests)."""
+    def zero(leaf, scan):
+        if scan:
+            return leaf.at[:, slot].set(0)
+        return leaf.at[slot].set(0)
+    return _map_state_rows(cfg, specs, state, zero)
 
 
 def _maybe_remat(cfg, fn):

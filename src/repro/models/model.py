@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import lm
 from repro.models.attention import cross_kv
@@ -304,6 +305,40 @@ class Model:
         n_attn = sum(1 for s in self.specs if s.mixer in ("attn", "swa"))
         per_layer = 2 * page_size * cfg.n_kv_heads * cfg.d_head * itemsize
         return max(1, n_attn) * per_layer
+
+    # ------------------------------------------------------------------
+    # Paged recurrent state (per-slot rows; see serving/paged_state.py)
+    # ------------------------------------------------------------------
+    def read_state_row(self, state, slot):
+        """One slot's per-slot rows (recurrent mixer state, cross-attn
+        K/V, channelmix shifts) → flat leaf list (the recurrent-state
+        swap tier's device→host read)."""
+        return lm.gather_state_row(self.cfg, self.specs, state, slot)
+
+    def write_state_row(self, state, slot, leaves):
+        """Write a :meth:`read_state_row` leaf list back into slot
+        ``slot``'s rows (the recurrent-state refault write)."""
+        return lm.scatter_state_row(self.cfg, self.specs, state, slot,
+                                    leaves)
+
+    def reset_state_row(self, state, slot):
+        """Zero slot ``slot``'s rows — admission into a recycled slot
+        must not read the previous occupant's recurrent state."""
+        return lm.reset_state_row(self.cfg, self.specs, state, slot)
+
+    def state_row_bytes(self) -> int:
+        """HBM bytes one slot's per-slot rows span across all layers —
+        the MMU lease granularity for paged recurrent state. 0 for
+        pure-attention stacks (their serving state is all KV pages)."""
+        enc_len = self.cfg.encoder.seq_len if self.cfg.is_encdec else 0
+
+        def probe():
+            st = lm.init_paged_state(self.cfg, self.specs, 1, 1, 1,
+                                     enc_len=enc_len)
+            return lm.gather_state_row(self.cfg, self.specs, st, 0)
+        leaves = jax.eval_shape(probe)
+        return sum(int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+                   for leaf in leaves)
 
     # ------------------------------------------------------------------
     # Input specs (ShapeDtypeStruct stand-ins for the dry-run)

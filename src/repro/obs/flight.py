@@ -28,6 +28,7 @@ TRIGGER_KINDS = frozenset({
     "straggler",               # IRQ_DEGRADED from the data plane
     "admission_pressure",      # SLOPlane AdmissionPressure denial
     "grow_blocked",            # autoscaler could not place a resize
+    "crc_failure",             # model-registry bitstream CRC mismatch
 })
 
 

@@ -1,6 +1,10 @@
 from repro.serving.engine import (EngineStats, Request, ServeEngine,
                                   pool_pressure_gate)
+from repro.serving.model_registry import (ModelBitstream, ModelRegistry,
+                                          MuxEngine)
 from repro.serving.paged_kv import PagedKVCache
+from repro.serving.paged_state import PagedRecurrentState
 
-__all__ = ["EngineStats", "PagedKVCache", "Request", "ServeEngine",
+__all__ = ["EngineStats", "ModelBitstream", "ModelRegistry", "MuxEngine",
+           "PagedKVCache", "PagedRecurrentState", "Request", "ServeEngine",
            "pool_pressure_gate"]

@@ -82,6 +82,12 @@ class EngineStats:
     cow_forks: int = 0                  # private forks of shared pages
     swap_outs: int = 0                  # pages evicted to the host tier
     swap_ins: int = 0                   # pages refaulted back to device
+    # paged recurrent state (PR 9): per-slot RWKV/RG-LRU rows leased
+    # from the same pool as KV pages (engine-local deltas, as above)
+    state_pages_leased: int = 0
+    state_pages_freed: int = 0
+    state_swap_outs: int = 0            # state pages parked to host
+    state_swap_ins: int = 0             # state pages refaulted back
 
 
 class ServeEngine:
@@ -94,7 +100,8 @@ class ServeEngine:
                  seed: int = 0, obs=None, obs_tenant: str = "serve",
                  chunk_tokens: int = 0, share_prefix: bool = False,
                  prefix_capacity_pages: Optional[int] = None,
-                 swap: bool = False, transfer=None):
+                 swap: bool = False, transfer=None,
+                 state_paging: bool = False, owner_prefix: str = ""):
         self.cfg = cfg
         self.model = model
         self.B = batch_size
@@ -147,12 +154,45 @@ class ServeEngine:
         self.positions = np.full(batch_size, -1, np.int32)
         enc_len = (self.extra_batch["frames"].shape[1]
                    if "frames" in self.extra_batch else None)
+        # when the engine auto-sizes its pool AND pages recurrent state,
+        # size for the state rows too (KV working set alone would leave
+        # recurrent-family admissions dead on arrival)
+        extra_pages = 0
+        if state_paging and pool is None \
+                and hasattr(model, "state_row_bytes"):
+            row_bytes = model.state_row_bytes()
+            if row_bytes > 0:
+                pb = model.kv_page_bytes(page_size)
+                extra_pages = batch_size * max(1, -(-row_bytes // pb))
         self.kv = PagedKVCache(cfg, model, batch_size, capacity,
                                page_size=page_size, pool=pool,
                                auditor=auditor, enc_len=enc_len,
                                obs=self.obs, share_prefix=self._share,
                                prefix_capacity_pages=prefix_capacity_pages,
-                               swap=self._swap, transfer=transfer)
+                               swap=self._swap, transfer=transfer,
+                               extra_pages=extra_pages)
+        # multi-engine pool sharing (model multiplexing): request owners
+        # are namespaced per engine so two engines' rid spaces can never
+        # collide into one MMU owner (quota/isolation would silently mix)
+        self.owner_prefix = owner_prefix
+        # paged recurrent state: per-slot RWKV/RG-LRU rows leased from
+        # the same pool as the KV pages. Degrades to a no-op for
+        # pure-attention models (state_row_bytes() == 0).
+        self.rstate = None
+        if state_paging and hasattr(model, "state_row_bytes"):
+            from repro.serving.paged_state import PagedRecurrentState
+            rs = PagedRecurrentState(cfg, model, batch_size,
+                                     pool=self.kv.pool, obs=self.obs,
+                                     transfer=transfer)
+            self.rstate = rs if rs.enabled else None
+        # chunked prefill reads a slot's recurrent rows as its initial
+        # chunk state — a recycled slot must be zeroed at admission or
+        # the newcomer reads the previous occupant's state
+        self._row_reset_fn = None
+        if self._chunked and getattr(model, "state_row_bytes",
+                                     lambda: 0)() > 0:
+            self._row_reset_fn = jax.jit(model.reset_state_row,
+                                         donate_argnums=(0,))
         self._logits: Optional[np.ndarray] = None    # (B, V*) host copy
         # chunked-prefill bookkeeping: cursor = prompt tokens written so
         # far (-1 = not prefilling); _next = sampled-but-unemitted token
@@ -217,13 +257,15 @@ class ServeEngine:
                 if not self.waiting:
                     break
                 req = self.waiting.popleft()
-            owner = f"req{req.rid}"
+            owner = f"{self.owner_prefix}req{req.rid}"
             plen = len(req.prompt)
             # chunked: the admission ask is one chunk's pages, later
             # chunks fault the rest of the table in incrementally
             lease_len = (min(plen, self.chunk_tokens) if self._chunked
                          else plen)
             n_pages = max(1, -(-lease_len // self.kv.page_size))
+            if self.rstate is not None:
+                n_pages += self.rstate.blocks_per_slot
             live = any(s is not None for s in self.slots)
             gated = (self.admission_gate is not None and live
                      and not self.admission_gate(owner, n_pages))
@@ -273,6 +315,33 @@ class ServeEngine:
                     # exhaustion instead of busy-spinning run_round()
                     raise
                 break
+            if self.rstate is not None:
+                # the slot's recurrent-state pages lease from the same
+                # pool, under the same deferral/swap-relief story
+                try:
+                    try:
+                        self.rstate.admit(i, owner)
+                    except MMUError:
+                        if not (self._swap and self._swap_out_victim()):
+                            raise
+                        self.rstate.admit(i, owner)
+                except MMUError as exc:
+                    self.stats.pages_freed += self.kv.tables[i].n_pages
+                    self.kv.release(i)
+                    self.stats.deferred += 1
+                    if self.obs.enabled:
+                        self.obs.tracer.event(self.obs_tenant, req.rid,
+                                              PHASE_DEFERRED,
+                                              cause=type(exc).__name__)
+                    with self._lock:
+                        self.waiting.appendleft(req)
+                    if all(s is None for s in self.slots):
+                        raise
+                    break
+                self.stats.state_pages_leased += self.rstate.blocks_per_slot
+            if self._row_reset_fn is not None:
+                self.kv.state = self._row_reset_fn(self.kv.state,
+                                                   np.int32(i))
             if shared:
                 self.stats.shared_prefix_hits += 1
                 self.stats.shared_prefix_tokens += shared
@@ -334,6 +403,7 @@ class ServeEngine:
         self.stats.deferred += 1
         self.stats.pages_freed += self.kv.tables[i].n_pages
         self.kv.release(i)
+        self._release_state(i)
         self.slots[i] = None
         self.positions[i] = -1
         self._cursor[i] = -1
@@ -415,6 +485,14 @@ class ServeEngine:
                     self.obs.tracer.event(self.obs_tenant, req.rid,
                                           PHASE_PREFILL, tokens=plen)
 
+    def _release_state(self, i: int):
+        """Return slot ``i``'s recurrent-state pages (no-op without
+        paged state)."""
+        if self.rstate is None or self.rstate.tables[i] is None:
+            return
+        self.stats.state_pages_freed += self.rstate.tables[i].n_pages
+        self.rstate.release(i)
+
     # ------------------------------------------------------------------
     # Swap tier: park a victim slot under pressure, resume when calm
     # ------------------------------------------------------------------
@@ -436,22 +514,29 @@ class ServeEngine:
         return False
 
     def _park(self, j: int, mid_step: bool = False) -> bool:
-        """Suspend slot ``j``: private pages to the host tier, decode
-        position saved. False if nothing moved (fully shared slot)."""
+        """Suspend slot ``j``: private KV pages and recurrent-state rows
+        to the host tier, decode position saved. False if nothing moved
+        (fully shared slot with no recurrent state)."""
         moved = self.kv.swap_out(j)
-        if moved == 0:
+        smoved = 0
+        if self.rstate is not None:
+            self.kv.state, smoved = self.rstate.park(self.kv.state, j)
+        if moved == 0 and smoved == 0:
             return False                 # fully shared slot: no relief
         self._parked[j] = int(self.positions[j])
         if mid_step:
             self._emitted_parked.add(j)
         self.positions[j] = -1
         self.stats.swap_outs += moved
+        self.stats.state_swap_outs += smoved
         if self.obs.enabled:
             self.obs.tracer.event(self.obs_tenant, self.slots[j].rid,
-                                  PHASE_SWAP_OUT, pages=moved)
+                                  PHASE_SWAP_OUT, pages=moved,
+                                  state_pages=smoved)
             self.obs.flight_record(
                 self.obs_tenant, "kv_swap_out",
-                {"slot": j, "pages": moved, "rid": self.slots[j].rid})
+                {"slot": j, "pages": moved, "state_pages": smoved,
+                 "rid": self.slots[j].rid})
         return True
 
     def _try_resume(self):
@@ -471,6 +556,8 @@ class ServeEngine:
             for j in range(self.B))
         for j in sorted(self._parked):
             need = self.kv.swapped_blocks(j)
+            if self.rstate is not None:
+                need += self.rstate.swapped_blocks(j)
             # reserve the growth page when the pending write position
             # sits past the table — resuming into an exactly-full pool
             # would re-park the slot at once without emitting anything
@@ -489,14 +576,20 @@ class ServeEngine:
                 if need > free:
                     continue
             n = self.kv.swap_in(j)
+            sn = 0
+            if self.rstate is not None:
+                self.kv.state, sn = self.rstate.refault(self.kv.state, j)
             self.positions[j] = self._parked.pop(j)
             self.stats.swap_ins += n
+            self.stats.state_swap_ins += sn
             if self.obs.enabled:
                 self.obs.tracer.event(self.obs_tenant, self.slots[j].rid,
-                                      PHASE_REFAULT, pages=n)
+                                      PHASE_REFAULT, pages=n,
+                                      state_pages=sn)
                 self.obs.flight_record(
                     self.obs_tenant, "kv_refault",
-                    {"slot": j, "pages": n, "rid": self.slots[j].rid})
+                    {"slot": j, "pages": n, "state_pages": sn,
+                     "rid": self.slots[j].rid})
             return                       # one resume per step
 
     def _finish(self, i, finished):
@@ -509,6 +602,7 @@ class ServeEngine:
         self._cursor[i] = -1
         self.stats.pages_freed += self.kv.tables[i].n_pages
         self.kv.release(i)                        # pages back to the MMU
+        self._release_state(i)
         self.completed[r.rid] = r
         self.stats.completed += 1
         finished.append(r)

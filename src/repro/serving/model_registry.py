@@ -1,0 +1,425 @@
+"""Model multiplexing plane — weights as the paper's bitstreams.
+
+The paper's signature mechanism is partial reconfiguration: accelerator
+bitstreams swap under a stable shell while tenants share the device.
+Here the analog is *model weights*: one VMM hosts multiple model
+families as registered :class:`ModelBitstream`\\ s (weights + arch
+descriptor, CRC-committed through the existing ``core/reconfig.py``
+Bitfile path), tenants bind to a model at register/submit time, and
+idle models hot-swap their weights to the host tier under memory
+pressure — reconfiguration cost metered like the paper's fig6b
+breakdown (``model_swap_in_s`` / ``model_swap_out_s`` histograms, a
+``model_residency`` gauge, flight-recorder events).
+
+Two layers:
+
+* :class:`ModelRegistry` — the bitstream store. ``register()`` builds
+  (or adopts) a model + params, fingerprints the weights into a
+  ``Bitfile`` whose ``slice_fingerprint`` commits to the parameter
+  bytes, and tracks residency. ``params(name)`` is the serving-path
+  entry: it swaps the model in if needed (CRC-verified — a corrupted
+  host copy raises ``LegalityError`` instead of serving garbage),
+  evicts least-recently-used idle models past the ``max_resident``
+  budget, and returns device params.
+* :class:`MuxEngine` — per-model slot groups over ONE shared
+  ``SegmentPool``: each family gets its own :class:`ServeEngine`
+  (decode batches stay per-family — the arrays differ per arch) while
+  admission quotas, paging, the KV pool and the recurrent-state pool
+  all draw from the same MMU segments, with per-family owner
+  namespacing so rid spaces can never collide into one MMU owner.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.mmu import SegmentPool
+from repro.core.reconfig import (Bitfile, LegalityError, ProgramLoader,
+                                 weights_fingerprint)
+from repro.core.shell import TransferEngine
+from repro.kernels.common import cdiv
+from repro.obs import NULL_HUB
+from repro.serving.engine import ServeEngine
+
+
+@dataclass
+class ModelBitstream:
+    """One registered model family: weights + arch descriptor, with a
+    Bitfile whose CRC commits to the parameter bytes."""
+    name: str
+    arch: str
+    cfg: object
+    model: object
+    bitfile: Bitfile
+    params: object = None              # device pytree while resident
+    host_params: object = None         # host copy while swapped out
+    resident: bool = False
+    param_bytes: int = 0
+    last_used: int = 0                 # registry clock, not wall time
+    swap_outs: int = 0
+    swap_ins: int = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "arch": self.arch,
+            "resident": self.resident,
+            "param_bytes": self.param_bytes,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "crc": self.bitfile.crc,
+        }
+
+
+class ModelRegistry:
+    """Weights-as-bitstreams store with residency + CRC verification."""
+
+    def __init__(self, loader: Optional[ProgramLoader] = None,
+                 max_resident: Optional[int] = None, obs=None,
+                 transfer: Optional[TransferEngine] = None,
+                 auditor=None, verify_weights: bool = True):
+        # sharing a VMM's loader routes crc_checks/crc_failures into
+        # VMM.stats() — the registry is the serving-path caller the
+        # Bitfile CRC machinery never had
+        self.loader = loader if loader is not None \
+            else ProgramLoader(auditor=auditor)
+        self.max_resident = max_resident
+        self.obs = obs if obs is not None else NULL_HUB
+        self.transfer = transfer if transfer is not None \
+            else TransferEngine(mode="vm_nocopy")
+        self.verify_weights = verify_weights
+        self._models: Dict[str, ModelBitstream] = {}
+        self._clock = 0
+
+    # ------------------------------------------------------------------
+    # Registration
+    # ------------------------------------------------------------------
+    def register(self, name: str, arch: Optional[str] = None, cfg=None,
+                 model=None, params=None, seed: int = 0,
+                 reduced: bool = True) -> ModelBitstream:
+        """Register a model family as a bitstream. Builds cfg/model/
+        params when not given; fingerprints the weights; the new model
+        is resident (evicting LRU idle models past ``max_resident``)."""
+        assert name not in self._models, f"model {name!r} already registered"
+        arch = arch or name
+        if cfg is None:
+            from repro.configs import get_config
+            cfg = get_config(arch, reduced=reduced)
+        if model is None:
+            from repro.models import build_model
+            model = build_model(cfg)
+        if params is None:
+            params = model.init(jax.random.PRNGKey(seed))
+        fp = weights_fingerprint(params)
+        import hashlib
+        pk = hashlib.sha256(repr((arch, cfg.n_layers, cfg.d_model,
+                                  cfg.vocab, "serve")).encode()) \
+            .hexdigest()[:16]
+        bf = Bitfile(program_key=pk, topology_key="weights",
+                     slice_fingerprint=fp, compiled=None,
+                     abstract_args=())
+        entry = ModelBitstream(
+            name=name, arch=arch, cfg=cfg, model=model, bitfile=bf,
+            params=params, resident=True,
+            param_bytes=sum(np.asarray(leaf).nbytes
+                            for leaf in jax.tree.leaves(params)))
+        self._models[name] = entry
+        self._touch(entry)
+        # CRC verified at load — the serving-path check Bitfile always
+        # promised but nothing called
+        self._verify(entry, where="register")
+        self._set_residency(entry)
+        self._evict_over_budget(keep={name})
+        return entry
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def __getitem__(self, name: str) -> ModelBitstream:
+        return self._models[name]
+
+    def names(self) -> List[str]:
+        return list(self._models)
+
+    # ------------------------------------------------------------------
+    # Residency / the serving path
+    # ------------------------------------------------------------------
+    def params(self, name: str, keep=()):
+        """Device params for ``name`` — THE serving-path entry. Swaps
+        the model in when needed (CRC-verified), evicting LRU idle
+        models not in ``keep`` past the residency budget."""
+        entry = self._models[name]
+        self._touch(entry)
+        # enforce the residency budget on every serve, not just on a
+        # miss — shrinking max_resident (or a family going idle) must
+        # actually reconfigure idle weights away
+        self._evict_over_budget(keep=set(keep) | {name},
+                                incoming=0 if entry.resident else 1)
+        if not entry.resident:
+            self.swap_in(name)
+        return entry.params
+
+    def _touch(self, entry: ModelBitstream):
+        self._clock += 1
+        entry.last_used = self._clock
+
+    def swap_out(self, name: str) -> float:
+        """Hot-swap a model's weights to the host tier (the paper's
+        reconfigure-away). Returns seconds spent."""
+        entry = self._models[name]
+        if not entry.resident:
+            return 0.0
+        t0 = time.perf_counter()
+        entry.host_params = jax.tree.map(self.transfer.d2h, entry.params)
+        entry.params = None
+        entry.resident = False
+        entry.swap_outs += 1
+        dt = time.perf_counter() - t0
+        self._set_residency(entry)
+        if self.obs.enabled:
+            self.obs.observe("model_swap_out_s", dt, model=name)
+            self.obs.count("model_swaps_total", model=name,
+                           direction="out")
+            self.obs.flight_record("registry", "model_swap_out",
+                                   {"model": name, "s": dt,
+                                    "bytes": entry.param_bytes})
+        return dt
+
+    def swap_in(self, name: str) -> float:
+        """Reconfigure a swapped model back onto the device: CRC check
+        first (metadata + weight bytes), then host→device. Returns
+        seconds spent — the reconfiguration cost the paper meters."""
+        entry = self._models[name]
+        if entry.resident:
+            return 0.0
+        t0 = time.perf_counter()
+        self._verify(entry, where="swap_in")
+        entry.params = jax.tree.map(self.transfer.h2d, entry.host_params)
+        entry.host_params = None
+        entry.resident = True
+        entry.swap_ins += 1
+        dt = time.perf_counter() - t0
+        self._touch(entry)
+        self._set_residency(entry)
+        if self.obs.enabled:
+            self.obs.observe("model_swap_in_s", dt, model=name)
+            self.obs.count("model_swaps_total", model=name,
+                           direction="in")
+            self.obs.flight_record("registry", "model_swap_in",
+                                   {"model": name, "s": dt,
+                                    "bytes": entry.param_bytes})
+        return dt
+
+    def _evict_over_budget(self, keep=frozenset(), incoming: int = 0):
+        """Swap out LRU models (not in ``keep``) until resident count
+        plus ``incoming`` fits ``max_resident``."""
+        if self.max_resident is None:
+            return
+        resident = [e for e in self._models.values() if e.resident]
+        victims = sorted((e for e in resident if e.name not in keep),
+                         key=lambda e: e.last_used)
+        while len(resident) + incoming > self.max_resident and victims:
+            v = victims.pop(0)
+            self.swap_out(v.name)
+            resident.remove(v)
+
+    # ------------------------------------------------------------------
+    # Verification
+    # ------------------------------------------------------------------
+    def _verify(self, entry: ModelBitstream, where: str):
+        """The bitstream legality gate: Bitfile metadata CRC, then the
+        weights fingerprint — a flipped byte in the host-tier copy makes
+        the recomputed CRC diverge and the load is refused."""
+        self.loader.verify_bitfile(entry.bitfile, owner=entry.name)
+        if not self.verify_weights:
+            return
+        src = entry.params if entry.resident else entry.host_params
+        fp = weights_fingerprint(src)
+        self.loader.crc_checks += 1
+        if self.obs.enabled:
+            self.obs.count("model_crc_checks_total", model=entry.name)
+        if fp != entry.bitfile.slice_fingerprint:
+            self.loader.crc_failures += 1
+            if self.loader.auditor:
+                self.loader.auditor.record(
+                    "bitfile_crc_fail", entry.name, {"where": where})
+            if self.obs.enabled:
+                self.obs.count("model_crc_failures_total",
+                               model=entry.name)
+                self.obs.flight_record("registry", "crc_failure",
+                                       {"model": entry.name,
+                                        "where": where,
+                                        "expect":
+                                        entry.bitfile.slice_fingerprint,
+                                        "got": fp})
+            raise LegalityError(
+                f"model {entry.name!r} weights CRC mismatch at {where} "
+                f"— refusing to load a corrupted bitstream")
+
+    def _set_residency(self, entry: ModelBitstream):
+        if self.obs.enabled:
+            self.obs.set_gauge("model_residency",
+                               1.0 if entry.resident else 0.0,
+                               model=entry.name)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    def residency(self) -> Dict[str, bool]:
+        return {n: e.resident for n, e in self._models.items()}
+
+    def stats(self) -> dict:
+        return {
+            "models": {n: e.snapshot() for n, e in self._models.items()},
+            "resident": sum(e.resident for e in self._models.values()),
+            "max_resident": self.max_resident,
+            "crc_checks": self.loader.crc_checks,
+            "crc_failures": self.loader.crc_failures,
+        }
+
+
+@dataclass
+class SlotGroup:
+    """One model family's serving lane inside the mux."""
+    name: str
+    engine: ServeEngine
+    submitted: int = 0
+    completed: int = 0
+    tokens: int = 0
+    active_s: float = 0.0              # wall time spent stepping this lane
+    tenants: set = field(default_factory=set)
+
+
+class MuxEngine:
+    """Per-model slot groups over one shared MMU pool.
+
+    Decode steps batch per family (the arrays differ per arch);
+    admission, paging quotas, the KV page pool and the paged recurrent
+    state all draw from the same ``SegmentPool``, and idle families'
+    *weights* hot-swap to the host tier under pressure via the
+    registry."""
+
+    def __init__(self, registry: ModelRegistry, models: List[str],
+                 batch_per_model: int = 2, capacity: int = 64,
+                 page_size: int = 8, chunk_tokens: int = 8,
+                 pool: Optional[SegmentPool] = None,
+                 pool_pages: Optional[int] = None, obs=None,
+                 state_paging: bool = True, swap: bool = True,
+                 pressure_hwm: Optional[float] = 0.9, auditor=None,
+                 engine_kw: Optional[dict] = None):
+        self.registry = registry
+        self.obs = obs if obs is not None else NULL_HUB
+        self.pressure_hwm = pressure_hwm
+        # one segment unit serves every family: the largest page footprint
+        entries = [registry[name] for name in models]
+        seg = max(e.model.kv_page_bytes(page_size) for e in entries)
+        if pool is None:
+            if pool_pages is None:
+                # default: every family's full working set fits (KV +
+                # recurrent-state pages); benchmarks pass a smaller
+                # pool_pages to force the swap tier into action
+                pool_pages = 0
+                for e in entries:
+                    blocks = cdiv(capacity, page_size)
+                    sbytes = e.model.state_row_bytes()
+                    blocks += cdiv(sbytes, seg) if sbytes else 0
+                    pool_pages += batch_per_model * blocks
+            pool = SegmentPool(total_bytes=pool_pages * seg,
+                               backend="bitmap", segment_bytes=seg,
+                               auditor=auditor, obs=obs)
+        self.pool = pool
+        self.groups: Dict[str, SlotGroup] = {}
+        kw = dict(engine_kw or {})
+        for e in entries:
+            eng = ServeEngine(
+                e.cfg, e.model, batch_per_model, capacity,
+                page_size=page_size, pool=pool, auditor=auditor,
+                chunk_tokens=chunk_tokens, swap=swap,
+                state_paging=state_paging, obs=obs, obs_tenant=e.name,
+                owner_prefix=f"{e.name}:", **kw)
+            self.groups[e.name] = SlotGroup(name=e.name, engine=eng)
+        self.bindings: Dict[str, str] = {}        # tenant → model
+
+    # ------------------------------------------------------------------
+    def bind(self, tenant: str, model: str):
+        """Bind a tenant to a registered model — submissions from this
+        tenant route to the model's slot group."""
+        assert model in self.groups, f"model {model!r} not served"
+        self.bindings[tenant] = model
+        self.groups[model].tenants.add(tenant)
+
+    def submit(self, prompt, model: Optional[str] = None,
+               tenant: Optional[str] = None, **kw):
+        """Submit to a family — by explicit ``model=`` or through a
+        tenant binding. Returns ``(model, rid)``."""
+        if model is None:
+            assert tenant is not None and tenant in self.bindings, \
+                f"tenant {tenant!r} is not bound to a model"
+            model = self.bindings[tenant]
+        g = self.groups[model]
+        rid = g.engine.submit(prompt, **kw)
+        g.submitted += 1
+        return model, rid
+
+    def has_work(self) -> bool:
+        return any(g.engine.has_work() for g in self.groups.values())
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[str, list]:
+        """One mux sweep: every family with work steps once against its
+        (swapped-in) weights; families left idle are reconfiguration
+        candidates when the shared pool runs hot."""
+        finished: Dict[str, list] = {}
+        active = [g for g in self.groups.values() if g.engine.has_work()]
+        if not active:
+            return finished
+        keep = {g.name for g in active}
+        if self.pressure_hwm is not None:
+            ms = self.pool.memory_stats()
+            hot = (ms["segments_in_use"]
+                   / max(ms["segments_total"], 1)) >= self.pressure_hwm
+            if hot:
+                # the paper's move: reconfigure idle bitstreams away
+                # while the shared device is under pressure
+                for name in self.registry.names():
+                    if name not in keep:
+                        self.registry.swap_out(name)
+        for g in active:
+            params = self.registry.params(g.name, keep=keep)
+            t0 = time.perf_counter()
+            done = g.engine.step(params)
+            g.active_s += time.perf_counter() - t0
+            if done:
+                g.completed += len(done)
+                g.tokens += sum(len(r.out_tokens) for r in done)
+                finished.setdefault(g.name, []).extend(done)
+        return finished
+
+    def run_round(self) -> Dict[str, list]:
+        """Drain every family's queue."""
+        finished: Dict[str, list] = {}
+        while self.has_work():
+            for name, done in self.step().items():
+                finished.setdefault(name, []).extend(done)
+        return finished
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "registry": self.registry.stats(),
+            "pool": self.pool.memory_stats(),
+            "groups": {
+                n: {
+                    "submitted": g.submitted,
+                    "completed": g.completed,
+                    "tokens": g.tokens,
+                    "active_s": g.active_s,
+                    "tenants": sorted(g.tenants),
+                    "engine": dict(g.engine.stats.__dict__),
+                }
+                for n, g in self.groups.items()
+            },
+        }

@@ -62,7 +62,8 @@ class PagedKVCache:
                  auditor=None, enc_len: Optional[int] = None, obs=None,
                  share_prefix: bool = False,
                  prefix_capacity_pages: Optional[int] = None,
-                 swap: bool = False, transfer=None):
+                 swap: bool = False, transfer=None,
+                 extra_pages: int = 0):
         self.cfg = cfg
         self.model = model
         self.B = batch_size
@@ -73,7 +74,10 @@ class PagedKVCache:
         self.num_pages = batch_size * self.blocks_per_slot
         self.page_bytes = model.kv_page_bytes(page_size)
         if pool is None:
-            pool = SegmentPool(total_bytes=self.num_pages * self.page_bytes,
+            # extra_pages: headroom the engine asks for beyond the KV
+            # working set (paged recurrent-state rows share this pool)
+            pool = SegmentPool(total_bytes=(self.num_pages + extra_pages)
+                               * self.page_bytes,
                                backend="bitmap",
                                segment_bytes=self.page_bytes,
                                auditor=auditor, obs=obs)
@@ -86,7 +90,13 @@ class PagedKVCache:
                 f"at least {self.blocks_per_slot} pages "
                 f"(1 page = 1 segment)")
         self.pool = pool
-        self.state = model.init_paged_state(batch_size, self.num_pages,
+        # the device arrays must cover EVERY frame the MMU can hand out,
+        # not just this engine's own working set: with a shared (or
+        # state-padded) pool, frames ≥ num_pages are real — a scatter to
+        # one would silently drop (mode="drop") and a gather would clamp
+        # to the last page, reading another slot's K/V
+        self.frame_count = max(self.num_pages, pool.n_segments)
+        self.state = model.init_paged_state(batch_size, self.frame_count,
                                             page_size, enc_len=enc_len)
         self.tables: List[Optional[object]] = [None] * batch_size
         self.owners: List[Optional[str]] = [None] * batch_size

@@ -1,0 +1,288 @@
+"""Model multiplexing plane (PR 9): weights-as-bitstreams registry,
+the mux engine, and paged recurrent state.
+
+Pool-level: a hypothesis sweep over random lease/park/refault/free
+interleavings of two families' recurrent-state rows on ONE shared
+``SegmentPool`` — refcounts stay consistent, no physical frame is ever
+mapped by two slots at once, and every slot's row holds exactly its own
+value (zeros while parked, restored after refault). Registry-level: LRU
+residency under ``max_resident`` round-trips weights byte-identically,
+and a flipped byte in the host-tier copy raises ``LegalityError`` with
+the failure surfaced in registry stats, ``VMM.stats()`` (shared
+loader), the obs counters, and a flight dump. Engine-level: a 3-family
+``MuxEngine`` over one shared pool produces greedy outputs
+byte-identical to per-family solo engines, including after hot-swap
+churn under ``max_resident=1``."""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to seeded-random sweeps
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.core.mmu import SWAPPED, MMUError, SegmentPool
+from repro.core.reconfig import LegalityError
+from repro.obs import ObsHub
+from repro.serving import ModelRegistry, MuxEngine, ServeEngine
+from repro.serving.paged_state import PagedRecurrentState
+
+SEG = 256
+W = 4          # elements per state row in the fake model
+B = 3          # slots per family
+
+
+# ===========================================================================
+# Paged recurrent state: lifecycle invariants under random interleavings
+# ===========================================================================
+
+class _RowModel:
+    """Minimal recurrent-model surface: state is a (B, W) f32 row set;
+    ``row_bytes`` is the accounting footprint the pool sees."""
+
+    def __init__(self, row_bytes):
+        self._rb = int(row_bytes)
+
+    def state_row_bytes(self):
+        return self._rb
+
+    def read_state_row(self, state, slot):
+        return [state[slot]]
+
+    def write_state_row(self, state, slot, leaves):
+        return state.at[slot].set(leaves[0])
+
+    def reset_state_row(self, state, slot):
+        return state.at[slot].set(0.0)
+
+
+def _family(pool, row_bytes):
+    ps = PagedRecurrentState(None, _RowModel(row_bytes), B, pool)
+    return ps, jnp.zeros((B, W), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=1),      # family
+              st.integers(min_value=0, max_value=B - 1),  # slot
+              st.integers(min_value=0, max_value=3)),     # lifecycle op
+    min_size=1, max_size=40))
+def test_state_lifecycle_random_interleavings(ops):
+    """Two families (1-block and 3-block rows) interleave
+    admit/park/refault/release on one 8-page pool — small enough that
+    leases bounce, exercising the failed-admit cleanup path too."""
+    pool = SegmentPool(total_bytes=8 * SEG, backend="bitmap",
+                       segment_bytes=SEG)
+    fams = [_family(pool, SEG - 40), _family(pool, 3 * SEG - 16)]
+    pss = [f[0] for f in fams]
+    states = [f[1] for f in fams]
+    assert pss[0].blocks_per_slot == 1 and pss[1].blocks_per_slot == 3
+    expect = [[None] * B for _ in range(2)]
+    lease = 0
+
+    for step, (f, slot, op) in enumerate(ops):
+        ps = pss[f]
+        if op == 0 and ps.tables[slot] is None:
+            try:
+                ps.admit(slot, f"fam{f}:req{lease}")
+                lease += 1
+            except MMUError:
+                assert ps.tables[slot] is None   # bounced lease is clean
+            else:
+                states[f] = ps.reset(states[f], slot)
+                val = float(step + 1)            # distinct per lease
+                states[f] = states[f].at[slot].set(val)
+                expect[f][slot] = val
+        elif op == 1:
+            states[f], _ = ps.park(states[f], slot)
+        elif op == 2:
+            try:
+                states[f], _ = ps.refault(states[f], slot)
+            except MMUError:
+                pass                             # retryable, not corrupting
+        elif op == 3:
+            ps.release(slot)
+            expect[f][slot] = None
+
+        # --- invariants after every op --------------------------------
+        assert pool.refcounts_consistent()
+        live = [p for g in range(2)
+                for pages in pss[g].live_pages().values()
+                for p in pages if p != SWAPPED]
+        assert len(live) == len(set(live)), \
+            f"physical frame mapped twice: {sorted(live)}"
+        for g in range(2):
+            rows = np.asarray(states[g])
+            for s in range(B):
+                if expect[g][s] is None:
+                    continue
+                # parked rows are zeroed on device (the host payload is
+                # the only copy); resident rows hold their own value
+                want = 0.0 if pss[g].swapped_blocks(s) else expect[g][s]
+                assert np.all(rows[s] == want), \
+                    (g, s, rows[s].tolist(), want)
+
+    for g in range(2):
+        for s in range(B):
+            pss[g].release(s)
+    assert pool.memory_stats()["segments_in_use"] == 0
+    assert pool.refcounts_consistent()
+
+
+# ===========================================================================
+# Registry: LRU residency, byte-identical round-trip, CRC gate
+# ===========================================================================
+
+def _tiny(name, seed):
+    """A registry entry that is pure weights — the registry never calls
+    into the model object unless a MuxEngine serves it."""
+    w = np.random.default_rng(seed).standard_normal(16).astype(np.float32)
+    return (name, SimpleNamespace(n_layers=1, d_model=4, vocab=7),
+            {"w": w})
+
+
+def test_lru_eviction_and_byte_identical_roundtrip():
+    reg = ModelRegistry(max_resident=2)
+    orig = {}
+    for seed, name in enumerate(("a", "b", "c")):
+        _, cfg, params = _tiny(name, seed)
+        orig[name] = params["w"].copy()
+        reg.register(name, arch=name, cfg=cfg, model=object(),
+                     params=params)
+    # registering c evicted the LRU resident (a)
+    assert reg.residency() == {"a": False, "b": True, "c": True}
+
+    w = np.asarray(reg.params("a")["w"])
+    assert np.array_equal(w, orig["a"])          # host round-trip exact
+    res = reg.residency()
+    assert res == {"a": True, "b": False, "c": True}  # b was LRU
+    assert reg["a"].swap_ins == 1 and reg["a"].swap_outs == 1
+    assert reg.stats()["crc_failures"] == 0
+    # crc verified at register (×3) and again on the swap-in
+    assert reg.stats()["crc_checks"] >= 4
+
+
+def test_crc_failure_surfaces_in_stats_obs_and_flight():
+    hub = ObsHub(enabled=True)
+    name, cfg, params = _tiny("tiny", 7)
+    reg = ModelRegistry(obs=hub)
+    reg.register(name, arch=name, cfg=cfg, model=object(), params=params)
+    reg.swap_out(name)
+    reg[name].host_params["w"][3] += 1.0         # flip a host-tier byte
+
+    with pytest.raises(LegalityError):
+        reg.params(name)                         # serving path refuses
+
+    s = reg.stats()
+    assert s["crc_failures"] >= 1
+    assert reg.residency()[name] is False        # never loaded
+    snap = hub.snapshot()
+    assert "model_crc_failures_total" in snap["metrics"]["counters"]
+    assert snap["flight"]["dumps"], \
+        "crc_failure must trigger a flight-recorder dump"
+
+
+def test_registry_shares_vmm_loader_and_model_binding():
+    """A registry built on a VMM's loader lands crc_checks/crc_failures
+    in ``VMM.stats()``, and ``create_vm(model=...)`` surfaces the
+    binding in the scheduler tenant snapshot."""
+    import tempfile
+
+    from jax.sharding import Mesh
+    from repro.core import VMM
+
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    vmm = VMM(Mesh(devs, ("data", "model")), ckpt_root=tempfile.mkdtemp())
+    try:
+        reg = ModelRegistry(loader=vmm.loader)
+        name, cfg, params = _tiny("tiny", 11)
+        reg.register(name, arch=name, cfg=cfg, model=object(),
+                     params=params)
+        assert vmm.stats()["crc_checks"] >= 1
+
+        reg.swap_out(name)
+        reg[name].host_params["w"][0] += 2.0
+        with pytest.raises(LegalityError):
+            reg.params(name)
+        assert vmm.stats()["crc_failures"] >= 1
+
+        t = vmm.create_vm("app", (1, 1), model="tiny")
+        assert t is not None
+        snap = vmm.stats()["scheduler"]["tenants"]["app"]
+        assert snap["model"] == "tiny"
+    finally:
+        vmm.shutdown()
+
+
+# ===========================================================================
+# MuxEngine: multi-model serving is byte-identical to solo serving
+# ===========================================================================
+
+FAMILIES = ["qwen1.5-0.5b", "rwkv6-7b", "recurrentgemma-2b"]
+
+
+def _prompts(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(6 + i,)).astype(np.int32)
+            for i in range(n)]
+
+
+def _ordered(done):
+    return [tuple(r.out_tokens) for r in sorted(done, key=lambda r: r.rid)]
+
+
+def test_mux_outputs_match_solo_and_survive_hot_swap():
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    families, prompts = {}, {}
+    for i, name in enumerate(FAMILIES):
+        cfg = get_config(name, reduced=True)
+        model = build_model(cfg)
+        families[name] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+        prompts[name] = _prompts(cfg, 2, seed=i)
+
+    solo = {}
+    for name, (cfg, model, params) in families.items():
+        eng = ServeEngine(cfg, model, 2, 16, page_size=8, chunk_tokens=8,
+                          state_paging=True)
+        for p in prompts[name]:
+            eng.submit(p, max_new_tokens=4)
+        solo[name] = _ordered(eng.run_round(params))
+        assert len(solo[name]) == 2
+
+    reg = ModelRegistry()
+    for name, (cfg, model, params) in families.items():
+        # same weights as the solo arm: divergence means the mux
+        # machinery (shared pool, state paging, swaps) corrupted state
+        reg.register(name, cfg=cfg, model=model, params=params)
+    mux = MuxEngine(reg, FAMILIES, batch_per_model=2, capacity=16,
+                    page_size=8, chunk_tokens=8)
+    for name in FAMILIES:
+        mux.bind(f"tenant-{name}", name)
+
+    for i in range(2):                      # interleave the families
+        for name in FAMILIES:
+            mux.submit(prompts[name][i], tenant=f"tenant-{name}",
+                       max_new_tokens=4)
+    finished = mux.run_round()
+    for name in FAMILIES:
+        assert _ordered(finished[name]) == solo[name], name
+
+    # hot-swap churn: with room for one resident family, every lane
+    # change reconfigures weights through the host tier — tokens served
+    # afterwards must still match the never-swapped solo run
+    reg.max_resident = 1
+    for name in FAMILIES:
+        mux.submit(prompts[name][0], tenant=f"tenant-{name}",
+                   max_new_tokens=4)
+        done = mux.run_round()[name]
+        assert _ordered(done)[0] == solo[name][0], name
+    assert sum(reg[n].swap_ins for n in FAMILIES) > 0
+    assert sum(reg[n].swap_outs for n in FAMILIES) > 0
+    assert reg.stats()["crc_failures"] == 0
+    assert mux.pool.refcounts_consistent()

@@ -24,6 +24,9 @@ VMM_STATS_KEYS = {
     "tenants", "memory", "floorplan_util", "fragmentation",
     "compile_hits", "compile_misses", "reconfigs", "violations",
     "transfer", "oplog_records", "ops", "scheduler", "autoscaler", "obs",
+    # model multiplexing plane (PR 9): bitstream CRC gate on the
+    # serving path
+    "crc_checks", "crc_failures",
 }
 
 MEMORY_STATS_KEYS = {
@@ -42,12 +45,17 @@ ENGINE_STATS_FIELDS = {
     # KV page hierarchy (PR 8)
     "shared_prefix_hits", "shared_prefix_tokens", "cow_forks",
     "swap_outs", "swap_ins",
+    # paged recurrent state (PR 9)
+    "state_pages_leased", "state_pages_freed",
+    "state_swap_outs", "state_swap_ins",
 }
 
 PLANE_TENANT_KEYS = {
     "submitted", "completed", "failed", "queue_depth", "wait_s",
     "service_s", "avg_wait_ms", "avg_service_ms", "stragglers",
     "credit", "weight", "priority",
+    # model multiplexing plane (PR 9): admission-time model binding
+    "model",
 }
 
 SLO_TENANT_EXTRA_KEYS = {
