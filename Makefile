@@ -1,12 +1,15 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fairness bench bench-paged bench-prefill bench-slo bench-obs bench-kv bench-mux
+.PHONY: test analyze smoke fairness bench bench-paged bench-prefill bench-slo bench-obs bench-kv bench-mux bench-watchdog
 
 test:            ## tier-1 verify
 	$(PY) -m pytest -x -q
 
-smoke: test fairness bench-paged bench-prefill bench-slo bench-obs bench-kv bench-mux   ## tier-1 + quick benchmark checks
+analyze:         ## concurrency + telemetry legality checker (writes ANALYSIS.json)
+	$(PY) -m repro.analysis
+
+smoke: analyze test fairness bench-paged bench-prefill bench-slo bench-obs bench-kv bench-mux bench-watchdog   ## legality + tier-1 + quick benchmark checks
 
 fairness:        ## WFQ vs broker vs passthrough share table (quick)
 	$(PY) benchmarks/scheduler_fairness.py --quick
@@ -28,6 +31,9 @@ bench-kv:        ## KV page hierarchy: warm-admission + swap-pressure gates
 
 bench-mux:       ## model multiplexing: per-family tok/s + hot-swap gates
 	$(PY) benchmarks/model_mux.py --quick
+
+bench-watchdog:  ## lock-watchdog off-path on the serving loop (<1% budget)
+	$(PY) benchmarks/lock_watchdog_overhead.py --quick
 
 bench:           ## full benchmark harness (CSV)
 	$(PY) benchmarks/run.py

@@ -1,0 +1,159 @@
+"""Lock-watchdog overhead on the serving hot path → BENCH_lock_watchdog.json.
+
+The watchdog's off-path contract is *measured, not assumed* (same
+discipline as ``benchmarks/obs_overhead.py``): with
+``REPRO_LOCK_WATCHDOG`` unset, every ``note_callback`` dispatch site
+pays one global-flag check and no lock is ever wrapped. Three numbers:
+
+* **off** — the production default: the paged-KV serving trace (with a
+  user admission gate installed, so the per-admission hook site is on
+  the path) timed with the watchdog disabled;
+* **off-path cost** — ns per disabled ``note_callback`` (timeit) times
+  the hook invocations the trace actually dispatches (counted in a
+  separate instrumented run), as a fraction of the serving loop: the
+  budget is **<1%**, enforced loudly;
+* **watching** — the opt-in mode (engines built inside an enabled
+  scope, every src/repro lock wrapped and every acquisition recorded),
+  reported so the cost of turning the watchdog ON is visible; that run
+  must also record zero cycles and zero callbacks-under-lock.
+
+    PYTHONPATH=src python benchmarks/lock_watchdog_overhead.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import timeit
+
+import jax
+import numpy as np
+
+OFF_BUDGET_PCT = 1.0
+
+
+def make_trace(n_requests, rng):
+    short, long_ = 12, 56
+    trace = []
+    for i in range(n_requests):
+        plen = short if i % 2 == 0 else long_
+        prompt = rng.integers(0, 512, size=(plen,)).astype(np.int32)
+        trace.append((prompt, 3 + (i % 3) * 3))
+    return trace
+
+
+def run_once(cfg, model, params, trace, batch, capacity, page_size):
+    from repro.serving import ServeEngine
+
+    # a permissive user gate keeps the engine.admission_gate hook site
+    # on the admission path — the hottest note_callback site
+    eng = ServeEngine(cfg, model, batch, capacity, page_size=page_size,
+                      chunk_tokens=8, admission_gate=lambda o, n: True)
+    it = iter(trace)
+    prompt, budget = next(it)
+    eng.submit(prompt, max_new_tokens=budget)
+    done = 0
+    t0 = time.perf_counter()
+    while eng.has_work() or done < len(trace):
+        finished = eng.step(params)
+        done += len(finished)
+        for _ in range(1 + len(finished)):
+            nxt = next(it, None)
+            if nxt is not None:
+                eng.submit(nxt[0], max_new_tokens=nxt[1])
+    return time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_lock_watchdog.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.requests = min(args.requests, 12)
+        args.repeats = min(args.repeats, 3)
+
+    from repro.analysis import lock_watchdog as lw
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    assert not lw.enabled(), "run this benchmark with the watchdog off"
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = make_trace(args.requests, np.random.default_rng(0))
+    bench = (cfg, model, params, trace, args.batch, args.capacity,
+             args.page_size)
+
+    run_once(*bench)                       # jit warmup
+
+    # -- off: the production default -----------------------------------
+    off_times = [run_once(*bench) for _ in range(args.repeats)]
+    off_min = min(off_times)
+
+    # -- per-call cost of a disabled note_callback ---------------------
+    n_calls = 1_000_000
+    ns_per_call = timeit.timeit(
+        "note_callback('bench')", number=n_calls,
+        globals={"note_callback": lw.note_callback}) / n_calls * 1e9
+
+    # -- hook dispatches per run (instrumented counting run) -----------
+    hooks = {}
+    orig = lw.WATCHDOG.note_callback
+    lw.WATCHDOG.note_callback = \
+        lambda tag: hooks.__setitem__(tag, hooks.get(tag, 0) + 1)
+    try:
+        with lw.watching() as w:
+            watching_s = run_once(*bench)
+            problems = w.problems()
+    finally:
+        lw.WATCHDOG.note_callback = orig
+        lw.WATCHDOG.reset()
+    hook_calls = sum(hooks.values())
+
+    off_overhead_pct = hook_calls * ns_per_call / (off_min * 1e9) * 100.0
+    watching_overhead_pct = max(
+        (watching_s - off_min) / off_min * 100.0, 0.0)
+
+    results = {
+        "off": {"min_s": off_min, "mean_s": float(np.mean(off_times)),
+                "runs": off_times,
+                "note_callback_ns": ns_per_call,
+                "hook_calls_per_run": hook_calls,
+                "hooks": hooks,
+                "overhead_pct": off_overhead_pct},
+        "watching": {"run_s": watching_s,
+                     "overhead_pct": watching_overhead_pct,
+                     "problems": problems},
+        "config": {"requests": args.requests, "repeats": args.repeats,
+                   "batch": args.batch, "capacity": args.capacity,
+                   "page_size": args.page_size,
+                   "off_budget_pct": OFF_BUDGET_PCT},
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[lock_watchdog] off: min {off_min:.3f}s; note_callback "
+          f"{ns_per_call:.0f}ns x {hook_calls} hooks/run = "
+          f"+{off_overhead_pct:.4f}% (budget {OFF_BUDGET_PCT}%); "
+          f"watching: {watching_s:.3f}s (+{watching_overhead_pct:.1f}%) "
+          f"→ {args.out}")
+
+    assert hook_calls >= args.requests, \
+        "the trace never reached a note_callback site — the counting " \
+        "run is broken, the off-path estimate means nothing"
+    assert not problems, \
+        f"watchdog flagged the serving loop itself: {problems}"
+    assert off_overhead_pct < OFF_BUDGET_PCT, (
+        f"LOCK WATCHDOG REGRESSION: the disabled off-path costs "
+        f"{off_overhead_pct:.3f}% of the serving loop (budget "
+        f"{OFF_BUDGET_PCT}%) — a hook site is doing work without its "
+        f"enabled-flag guard, or a hot path grew a hook it shouldn't pay")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""CLI: ``python -m repro.analysis [--json ANALYSIS.json] [--src DIR]``.
+
+Exit code 0 = legal; 1 = findings (printed, and written to the JSON
+report so regressions are diffable in review).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import default_src_root, run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="concurrency + telemetry legality checker")
+    ap.add_argument("--src", default=None,
+                    help="source root to analyze (default: repro pkg)")
+    ap.add_argument("--schema-test", default=None,
+                    help="path to the stats-schema golden test")
+    ap.add_argument("--json", default="ANALYSIS.json",
+                    help="machine-readable report path ('-' to skip)")
+    args = ap.parse_args(argv)
+
+    findings, report = run_all(args.src, args.schema_test)
+    if args.json != "-":
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    src = args.src or default_src_root()
+    n_edges = len(report["lock_order_edges"])
+    n_models = len(report["declared_models"])
+    n_metrics = len(report["metrics"])
+    print(f"analyzed {src}: {n_models} declared models, "
+          f"{n_edges} lock-order edges, {n_metrics} metric names")
+    if not findings:
+        print("legality: OK (0 findings)")
+        return 0
+    for rule, n in sorted(report["counts"].items()):
+        print(f"  {rule}: {n}")
+    for f in findings:
+        print(f"  {f}")
+    print(f"legality: FAIL ({len(findings)} findings)")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,6 +38,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.analysis.lock_watchdog import note_callback
 from repro.core.elastic import defragment, resize
 from repro.core.scheduler import IRQ_DEGRADED
 from repro.core.vmm import AdmissionError
@@ -84,9 +85,10 @@ class Autoscaler:
         # asks the KV swap tier to shed device pressure to host memory;
         # True turns ``grow_blocked`` into ``swap_relief``.
         self.swap_cb = swap_cb
-        self.actions: deque = deque(maxlen=256)
-        self._watched: Dict[str, _Watch] = {}
-        self._hooked: set = set()        # tenants whose cq has our handler
+        self.actions: deque = deque(maxlen=256)  # guarded-by: _lock
+        self._watched: Dict[str, _Watch] = {}    # guarded-by: _lock
+        # tenants whose cq has our handler
+        self._hooked: set = set()                # guarded-by: _lock
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -201,6 +203,8 @@ class Autoscaler:
         old = tuple(w.tenant.vslice.spec.shape)
         cands = self._candidates(old)
         if not cands:
+            if self.swap_cb is not None:
+                note_callback("autoscaler.swap_cb")
             if self.swap_cb is not None and self.swap_cb(w.tenant.name):
                 return self._record(w, now, action="swap_relief", frm=old,
                                     to=None, pressure_events=n_events,
@@ -221,6 +225,8 @@ class Autoscaler:
             return self._record(w, now, action="grow", frm=old,
                                 to=cands[0], pressure_events=n_events,
                                 defragmented=True)
+        if self.swap_cb is not None:
+            note_callback("autoscaler.swap_cb")
         if self.swap_cb is not None and self.swap_cb(w.tenant.name):
             # device capacity is exhausted but the KV swap tier absorbed
             # the pressure (a victim slot parked to host memory) — the

@@ -314,40 +314,52 @@ class SegmentPool:
         self.segment_bytes = segment_bytes
         self.n_segments = max(1, total_bytes // segment_bytes)
         self.backend_name = backend
-        self.alloc_backend = BACKENDS[backend](self.n_segments)
-        self.allocations: Dict[int, Allocation] = {}
-        self.page_tables: Dict[int, PageTable] = {}
+        self.alloc_backend = BACKENDS[backend](self.n_segments)  # guarded-by: _lock
+        self.allocations: Dict[int, Allocation] = {}     # guarded-by: _lock
+        self.page_tables: Dict[int, PageTable] = {}      # guarded-by: _lock
         # page-hierarchy state: physical frame → reference count (every
         # table mapping + every out-of-table pin holds one reference);
         # _pins tracks the pin component so the consistency invariant
         # can be checked exactly
-        self.frame_refs: Dict[int, int] = {}
-        self._pins: Dict[int, int] = {}
-        self.quota_segs: Dict[str, int] = {}
-        self.denied_by_owner: Dict[str, int] = {}
-        self.stats = MMUStats()
+        self.frame_refs: Dict[int, int] = {}             # guarded-by: _lock
+        self._pins: Dict[int, int] = {}                  # guarded-by: _lock
+        self.quota_segs: Dict[str, int] = {}             # guarded-by: _lock
+        self.denied_by_owner: Dict[str, int] = {}        # guarded-by: _lock
+        self.stats = MMUStats()                          # guarded-by: _lock
         self.auditor = auditor
         # telemetry hub (repro.obs.ObsHub); None/disabled → zero-cost.
         # Registry stripe locks only ever nest *inside* the pool lock.
         self.obs = obs
-        self._next_handle = 0
+        self._next_handle = 0                            # guarded-by: _lock
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def set_quota(self, owner: str, n_bytes: int):
-        self.quota_segs[owner] = -(-n_bytes // self.segment_bytes)
+        with self._lock:
+            self.quota_segs[owner] = -(-n_bytes // self.segment_bytes)
 
     def clear_quota(self, owner: str):
-        self.quota_segs.pop(owner, None)
+        with self._lock:
+            self.quota_segs.pop(owner, None)
 
-    def _owner_segs(self, owner: str) -> int:
+    def set_quota_segs(self, owner: str, n_segs: int):
+        """Segment-denominated quota (migration carries quotas across
+        pools with differing segment sizes already rounded)."""
+        with self._lock:
+            self.quota_segs[owner] = n_segs
+
+    def quota_segs_of(self, owner: str) -> Optional[int]:
+        with self._lock:
+            return self.quota_segs.get(owner)
+
+    def _owner_segs(self, owner: str) -> int:  # holds: _lock
         segs = sum(a.n_segs for a in self.allocations.values()
                    if a.owner == owner)
         segs += sum(t.n_pages for t in self.page_tables.values()
                     if t.owner == owner)
         return segs
 
-    def _deny(self, owner: str, cause: str = "denied"):
+    def _deny(self, owner: str, cause: str = "denied"):  # holds: _lock
         self.stats.denied += 1
         self.denied_by_owner[owner] = self.denied_by_owner.get(owner, 0) + 1
         if self.obs is not None and self.obs.enabled:
@@ -439,7 +451,7 @@ class SegmentPool:
     # ==================================================================
     def _alloc_single_pages(self, n: int, owner: str,
                             check_quota: bool = True,
-                            quota_extra: int = 0) -> List[int]:
+                            quota_extra: int = 0) -> List[int]:  # holds: _lock
         """n single-segment pages, or raise (lock held by caller).
 
         Each fresh frame starts with refcount 1. ``check_quota=False``
@@ -479,7 +491,7 @@ class SegmentPool:
             self.obs.count("mmu_pages_allocated_total", n, owner=owner)
         return pages
 
-    def _release_frame_locked(self, p: int, owner: str):
+    def _release_frame_locked(self, p: int, owner: str):  # holds: _lock
         """Drop one reference; free the frame at refcount 0."""
         refs = self.frame_refs.get(p)
         assert refs is not None and refs > 0, \
@@ -643,7 +655,8 @@ class SegmentPool:
                     f"block {logical} is swapped out — refault first")
             return t.pages[logical] * self.segment_bytes
 
-    def _check_table(self, handle: int, owner: str, event: str) -> PageTable:
+    def _check_table(self, handle: int, owner: str,
+                     event: str) -> PageTable:  # holds: _lock
         t = self.page_tables.get(handle)
         if t is None:
             raise MMUError(f"unknown page table {handle}")
@@ -657,30 +670,51 @@ class SegmentPool:
                 f"{owner} cannot touch {t.owner}'s page table")
         return t
 
-    def pages_in_use(self) -> int:
-        """Logical mappings with a physical frame (shared frames count
-        once per mapping; swapped entries count zero)."""
+    # -- introspection: public methods lock; memory_stats() composes the
+    # _locked internals under a single acquisition ----------------------
+    def _pages_in_use_locked(self) -> int:  # holds: _lock
         return sum(1 for t in self.page_tables.values()
                    for p in t.pages if p != SWAPPED)
 
+    def pages_in_use(self) -> int:
+        """Logical mappings with a physical frame (shared frames count
+        once per mapping; swapped entries count zero)."""
+        with self._lock:
+            return self._pages_in_use_locked()
+
     def frames_in_use(self) -> int:
         """Distinct physical frames live under the page API."""
-        return len(self.frame_refs)
+        with self._lock:
+            return len(self.frame_refs)
 
-    def swapped_pages(self) -> int:
+    def _swapped_pages_locked(self) -> int:  # holds: _lock
         return sum(1 for t in self.page_tables.values()
                    for p in t.pages if p == SWAPPED)
 
+    def swapped_pages(self) -> int:
+        with self._lock:
+            return self._swapped_pages_locked()
+
     # ------------------------------------------------------------------
     def utilization(self) -> float:
-        return 1.0 - self.alloc_backend.free_segments() / self.n_segments
+        with self._lock:
+            return 1.0 - self.alloc_backend.free_segments() / self.n_segments
 
-    def fragmentation(self) -> float:
-        """External fragmentation: 1 − largest free run / free segments."""
+    def free_segments(self) -> int:
+        """Locked view of the backend's free-segment count."""
+        with self._lock:
+            return self.alloc_backend.free_segments()
+
+    def _fragmentation_locked(self) -> float:  # holds: _lock
         free = self.alloc_backend.free_segments()
         if free == 0:
             return 0.0
         return 1.0 - self.alloc_backend.largest_free_run() / free
+
+    def fragmentation(self) -> float:
+        """External fragmentation: 1 − largest free run / free segments."""
+        with self._lock:
+            return self._fragmentation_locked()
 
     def memory_stats(self) -> dict:
         """Paging/occupancy snapshot for VMM.stats()['memory']."""
@@ -689,12 +723,12 @@ class SegmentPool:
                 "segments_total": self.n_segments,
                 "segments_in_use":
                     self.n_segments - self.alloc_backend.free_segments(),
-                "pages_in_use": self.pages_in_use(),
+                "pages_in_use": self._pages_in_use_locked(),
                 "page_tables": len(self.page_tables),
                 "page_faults": self.stats.page_faults,
                 "pages_allocated": self.stats.pages_allocated,
                 "pages_freed": self.stats.pages_freed,
-                "fragmentation": self.fragmentation(),
+                "fragmentation": self._fragmentation_locked(),
                 "quota_denials": dict(self.denied_by_owner),
                 # page-hierarchy view (prefix sharing / CoW / swap tier)
                 "frames_in_use": len(self.frame_refs),
@@ -704,7 +738,7 @@ class SegmentPool:
                 "cow_forks": self.stats.cow_forks,
                 "swap_outs": self.stats.swap_outs,
                 "swap_ins": self.stats.swap_ins,
-                "swapped_pages": self.swapped_pages(),
+                "swapped_pages": self._swapped_pages_locked(),
             }
 
     def overlaps_ok(self) -> bool:
@@ -712,14 +746,15 @@ class SegmentPool:
         tests) — contiguous spans and single-segment frames together.
         Shared frames appear in many tables but are *one* physical span;
         swapped entries hold no frame."""
-        frames = {p for t in self.page_tables.values()
-                  for p in t.pages if p != SWAPPED}
-        spans = sorted(
-            [(a.start_seg, a.start_seg + a.n_segs)
-             for a in self.allocations.values()]
-            + [(p, p + 1) for p in frames])
-        return all(spans[i][1] <= spans[i + 1][0]
-                   for i in range(len(spans) - 1))
+        with self._lock:
+            frames = {p for t in self.page_tables.values()
+                      for p in t.pages if p != SWAPPED}
+            spans = sorted(
+                [(a.start_seg, a.start_seg + a.n_segs)
+                 for a in self.allocations.values()]
+                + [(p, p + 1) for p in frames])
+            return all(spans[i][1] <= spans[i + 1][0]
+                       for i in range(len(spans) - 1))
 
     def refcounts_consistent(self) -> bool:
         """Hierarchy invariant: every live frame's refcount equals its

@@ -58,6 +58,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
+from repro.analysis.lock_watchdog import note_callback
 from repro.core.mmu import MMUError
 from repro.obs import NULL_HUB
 
@@ -172,10 +173,10 @@ class DataPlane:
         self.queue_high_watermark = queue_high_watermark
         self.queue_buildup_s = queue_buildup_s
         self.queue_irq_cooldown_s = queue_irq_cooldown_s
-        self._ewma: Dict[tuple, float] = {}
-        self._entries: Dict[str, _TenantEntry] = {}
+        self._ewma: Dict[tuple, float] = {}           # guarded-by: _lock
+        self._entries: Dict[str, _TenantEntry] = {}   # guarded-by: _lock
         self._lock = threading.Lock()
-        self._seq = 0
+        self._seq = 0                                 # guarded-by: _lock
 
     # -- tenant lifecycle ----------------------------------------------
     def register(self, tenant, weight: float = 1.0,
@@ -229,7 +230,8 @@ class DataPlane:
 
     def _run_job(self, job: _Job):
         t = job.tenant
-        e = self._entries.get(t.name)
+        with self._lock:
+            e = self._entries.get(t.name)
         rec = self.oplog.begin(t.name, job.op, job.detail) \
             if (self.oplog is not None and self.log_ops) else None
         t.enter_op()
@@ -272,29 +274,34 @@ class DataPlane:
         return dt
 
     def _account_locked(self, e: "_TenantEntry", job: "_Job", dt: float,
-                        ok: bool):
+                        ok: bool):  # holds: _lock
         """Per-plane stats hook; called with self._lock held."""
 
     # -- straggler detection (EWMA deadline per (tenant, op)) ----------
     def _observe(self, t, op: str, dt: float):
         key = (t.name, op)
-        ew = self._ewma.get(key)
-        if ew is not None and dt > self.straggler_factor * ew:
+        straggler_ew = None
+        with self._lock:
+            ew = self._ewma.get(key)
+            if ew is not None and dt > self.straggler_factor * ew:
+                straggler_ew = ew
+                e = self._entries.get(t.name)
+                if e is not None:
+                    e.stats.stragglers += 1
+            self._ewma[key] = dt if ew is None else 0.8 * ew + 0.2 * dt
+        if straggler_ew is not None:
             t.straggler_count += 1
-            e = self._entries.get(t.name)
-            if e is not None:
-                e.stats.stragglers += 1
             if self.obs.enabled:
                 self.obs.count("plane_stragglers_total", tenant=t.name,
                                op=op)
                 self.obs.flight_record(t.name, "straggler",
-                                       {"op": op, "dt": dt, "ewma": ew})
+                                       {"op": op, "dt": dt,
+                                        "ewma": straggler_ew})
             t.cq.raise_event(IRQ_DEGRADED, "straggler",
-                             {"op": op, "dt": dt, "ewma": ew})
-        self._ewma[key] = dt if ew is None else 0.8 * ew + 0.2 * dt
+                             {"op": op, "dt": dt, "ewma": straggler_ew})
 
     # -- queue-buildup IRQ ---------------------------------------------
-    def _note_depth(self, e: _TenantEntry):
+    def _note_depth(self, e: _TenantEntry):  # holds: _lock
         """Call with self._lock held, after a depth change."""
         depth = len(e.q)
         e.stats.queue_depth = depth
@@ -356,13 +363,16 @@ class _QueuedPlane(DataPlane):
         buildup = None
         with self._cv:
             e = self._entries.get(tenant.name)
-            if e is None:
-                job.future.set_exception(
-                    KeyError(f"tenant {tenant.name} not registered"))
-                return job.future
-            e.q.append(job)
-            buildup = self._note_depth(e)
-            self._cv.notify()
+            if e is not None:
+                e.q.append(job)
+                buildup = self._note_depth(e)
+                self._cv.notify()
+        if e is None:
+            # resolve OUTSIDE the lock: set_exception runs done-callbacks
+            # (user code) on the calling thread
+            job.future.set_exception(
+                KeyError(f"tenant {tenant.name} not registered"))
+            return job.future
         if buildup is not None:
             if self.obs.enabled:
                 self.obs.count("plane_buildup_irqs_total",
@@ -385,7 +395,7 @@ class _QueuedPlane(DataPlane):
             dt = self._run_job(job)
             self._charge(entry, dt)
 
-    def _pick(self):
+    def _pick(self):  # holds: _lock
         """Return (job, entry, retry_delay); job is peeked, not popped.
         Called with the lock held. Default: rate-limited min-key scan
         over backlogged tenants, ranking via the per-plane ``_rank``
@@ -411,12 +421,12 @@ class _QueuedPlane(DataPlane):
             e.tokens -= 1.0
         return e.q[0], e, None
 
-    def _rank(self, e: _TenantEntry, now: float) -> tuple:
+    def _rank(self, e: _TenantEntry, now: float) -> tuple:  # holds: _lock
         """Scheduling key for ``_pick`` (smaller = served first).
         Called with the lock held."""
         raise NotImplementedError
 
-    def _refill(self, e: _TenantEntry, now: float):
+    def _refill(self, e: _TenantEntry, now: float):  # holds: _lock
         """Token-bucket refill for per-tenant op-rate limits. Returns
         (ready, retry_delay). Called with the lock held."""
         if e.rate_limit <= 0.0:
@@ -444,7 +454,8 @@ class BrokerPlane(_QueuedPlane):
     name = "broker"
 
     def __init__(self, **kw):
-        self._rr: deque = deque()            # tenant-name rotation order
+        # guarded-by: _lock  (tenant-name rotation order)
+        self._rr: deque = deque()
         super().__init__(**kw)
 
     def register(self, tenant, **kw):
@@ -462,7 +473,7 @@ class BrokerPlane(_QueuedPlane):
                 pass
         super().unregister(name)
 
-    def _pick(self):
+    def _pick(self):  # holds: _lock
         for _ in range(len(self._rr)):
             self._rr.rotate(-1)
             e = self._entries.get(self._rr[-1])
@@ -491,10 +502,10 @@ class WFQPlane(_QueuedPlane):
     MIN_COST_S = 1e-6
 
     def __init__(self, **kw):
-        self._vclock = 0.0
+        self._vclock = 0.0                    # guarded-by: _lock
         super().__init__(**kw)
 
-    def _rank(self, e: _TenantEntry, now: float) -> tuple:
+    def _rank(self, e: _TenantEntry, now: float) -> tuple:  # holds: _lock
         return (e.priority, max(e.vtime, self._vclock), e.q[0].seq)
 
     def _charge(self, entry: _TenantEntry, service_s: float):
@@ -567,7 +578,7 @@ class SLOPlane(_QueuedPlane):
         return self.default_slo_s.get(e.priority, 0.25)
 
     # -- MMU-pressure admission gate -----------------------------------
-    def _refresh_pressure(self, e: _TenantEntry, now: float):
+    def _refresh_pressure(self, e: _TenantEntry, now: float):  # holds: _lock
         """Recompute cached pool pressure. Lock held by caller; the pool
         lock nests inside the plane lock (never the reverse)."""
         if now - e.pressure_checked < self.pressure_refresh_s:
@@ -597,28 +608,32 @@ class SLOPlane(_QueuedPlane):
             e.deny_until = now + self.deny_hold_s
 
     def submit(self, tenant, op, work, detail=None) -> Future:
-        e = self._entries.get(tenant.name)
-        if e is not None:
-            now = time.monotonic()
-            with self._lock:
+        denied, pressure = False, 0.0
+        now = time.monotonic()
+        with self._lock:
+            e = self._entries.get(tenant.name)
+            if e is not None:
                 self._refresh_pressure(e, now)
                 denied = (now < e.deny_until
                           or (e.mem_pressure >= self.pressure_deny_util
                               and not e.has_leases))
-            if denied and self.relief_cb is not None \
-                    and self.relief_cb(tenant.name):
-                # swap-before-deny: the hierarchy shed pressure (pages
-                # moved to the host tier) — admit instead of denying
-                denied = False
-                with self._lock:
-                    e.pressure_relieved += 1
-                    e.deny_until = 0.0
-                if self.obs.enabled:
-                    self.obs.count("plane_pressure_relieved_total",
-                                   tenant=tenant.name)
-                    self.obs.flight_record(
-                        tenant.name, "pressure_relieved",
-                        {"op": op, "mem_pressure": e.mem_pressure})
+                pressure = e.mem_pressure
+        if e is not None:
+            if denied and self.relief_cb is not None:
+                note_callback("plane.relief_cb")
+                if self.relief_cb(tenant.name):
+                    # swap-before-deny: the hierarchy shed pressure
+                    # (pages moved to the host tier) — admit instead
+                    denied = False
+                    with self._lock:
+                        e.pressure_relieved += 1
+                        e.deny_until = 0.0
+                    if self.obs.enabled:
+                        self.obs.count("plane_pressure_relieved_total",
+                                       tenant=tenant.name)
+                        self.obs.flight_record(
+                            tenant.name, "pressure_relieved",
+                            {"op": op, "mem_pressure": pressure})
             if denied:
                 with self._lock:
                     e.admission_denied += 1
@@ -627,16 +642,16 @@ class SLOPlane(_QueuedPlane):
                                    tenant=tenant.name)
                     self.obs.flight_record(
                         tenant.name, "admission_pressure",
-                        {"op": op, "mem_pressure": e.mem_pressure})
+                        {"op": op, "mem_pressure": pressure})
                 fut = Future()
                 fut.set_exception(AdmissionPressure(
                     f"{tenant.name}: memory pressure "
-                    f"{e.mem_pressure:.2f} — admission denied"))
+                    f"{pressure:.2f} — admission denied"))
                 return fut
         return super().submit(tenant, op, work, detail)
 
     # -- EDF rank: deadline within (possibly demoted) priority class ---
-    def _rank(self, e: _TenantEntry, now: float) -> tuple:
+    def _rank(self, e: _TenantEntry, now: float) -> tuple:  # holds: _lock
         self._refresh_pressure(e, now)
         prio = e.priority + (1 if e.demoted else 0)
         return (prio, e.q[0].t_submit + self._slo_s(e), e.q[0].seq)
@@ -644,7 +659,7 @@ class SLOPlane(_QueuedPlane):
     # -- attainment accounting (locked hook: runs before the job's
     # future resolves, so stats() is never behind a woken caller) ------
     def _account_locked(self, e: _TenantEntry, job: _Job, dt: float,
-                        ok: bool):
+                        ok: bool):  # holds: _lock
         wait = max(0.0, time.monotonic() - job.t_submit - dt)
         e.waits.append(wait)
         # a failed op never served its caller — always an SLO miss,

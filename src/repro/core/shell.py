@@ -25,6 +25,8 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.analysis.lock_watchdog import note_callback
+
 
 # ===========================================================================
 # Transfer engine (DMA)
@@ -146,13 +148,15 @@ class CompletionQueue:
 
     def __init__(self, n_sources: int = 32, depth: int = 1024):
         self.n_sources = n_sources
-        self.ring: deque = deque(maxlen=depth)
-        self.status: int = 0                     # pending-source bitmask
-        self.mask: int = 0                       # 1 = suppressed
-        self.handlers: Dict[int, Callable] = {}
-        self.dropped = 0
+        self.ring: deque = deque(maxlen=depth)   # guarded-by: _lock
+        # pending-source bitmask
+        self.status: int = 0                     # guarded-by: _lock
+        self.mask: int = 0                       # guarded-by: _lock (1 = suppressed)
+        self.handlers: Dict[int, Callable] = {}  # guarded-by: _lock
+        self.dropped = 0                         # guarded-by: _lock
         self._lock = threading.Lock()
-        self._delivering = False                 # single-deliverer flag
+        # single-deliverer flag
+        self._delivering = False                 # guarded-by: _lock
 
     # -- guest/VMM API ---------------------------------------------------
     def set_irq(self, source: int, handler: Callable):
@@ -221,6 +225,9 @@ class CompletionQueue:
                     # recurse back into delivery
                     self.mask |= (1 << ev.source)
                 try:
+                    # handler runs OUTSIDE the cq lock (user code: obs
+                    # providers, autoscaler subscription, test ISRs)
+                    note_callback("cq.handler")
                     h(ev)
                 finally:
                     with self._lock:

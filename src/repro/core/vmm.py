@@ -81,7 +81,7 @@ class VMM:
         self.compiler = CompileService()
         self.loader = ProgramLoader(auditor=self.auditor)
         self.checkpointer = TenantCheckpointer(ckpt_root)
-        self.tenants: Dict[str, Tenant] = {}
+        self.tenants: Dict[str, Tenant] = {}   # guarded-by: _lock
         self._lock = threading.Lock()
         # Data-plane dispatch is fully delegated to the scheduler subsystem.
         self.plane = make_data_plane(policy, oplog=self.oplog,
@@ -195,8 +195,7 @@ class VMM:
             "axis_names": t.vslice.axis_names,
             "hbm_bytes": t.pool.n_segments * t.pool.segment_bytes,
             "hbm_free_bytes":
-                t.pool.alloc_backend.free_segments()
-                * t.pool.segment_bytes,
+                t.pool.free_segments() * t.pool.segment_bytes,
             "policy": self.policy,
             "healthy": t.vslice.healthy,
         }
@@ -346,7 +345,9 @@ class VMM:
         return meta
 
     def mark_slice_failed(self, slice_id: int):
-        for t in self.tenants.values():
+        with self._lock:
+            tenants = list(self.tenants.values())
+        for t in tenants:
             if t.vslice.slice_id == slice_id:
                 t.vslice.healthy = False
                 # record BEFORE raising: slice_failed is a flight-
@@ -389,8 +390,9 @@ class VMM:
             total_bytes=vs.n_devices * self.hbm_per_chip,
             backend=self.mmu_backend, segment_bytes=self.segment_bytes,
             auditor=self.auditor, obs=self.obs)
-        if t.name in t.pool.quota_segs:
-            pool.quota_segs[t.name] = t.pool.quota_segs[t.name]
+        q_segs = t.pool.quota_segs_of(t.name)
+        if q_segs is not None:
+            pool.set_quota_segs(t.name, q_segs)
         t.pool = pool
         t.buffers.clear()
         if t.program_request is not None:

@@ -37,9 +37,9 @@ class FlightRecorder:
                  dump_interval_s: float = 1.0):
         self.capacity = capacity
         self.dump_interval_s = dump_interval_s
-        self._rings: Dict[str, deque] = {}
-        self._last_dump: Dict[str, float] = {}
-        self.dumps: deque = deque(maxlen=max_dumps)
+        self._rings: Dict[str, deque] = {}       # guarded-by: _lock
+        self._last_dump: Dict[str, float] = {}   # guarded-by: _lock
+        self.dumps: deque = deque(maxlen=max_dumps)  # guarded-by: _lock
         self._lock = threading.Lock()
 
     # -- recording -----------------------------------------------------
@@ -67,7 +67,8 @@ class FlightRecorder:
         with self._lock:
             return self._dump_locked(tenant, reason, time.monotonic())
 
-    def _dump_locked(self, tenant: str, reason: str, now: float) -> dict:
+    def _dump_locked(self, tenant: str, reason: str,
+                     now: float) -> dict:  # holds: _lock
         self._last_dump[tenant] = now
         d = {"tenant": tenant, "reason": reason, "t": now,
              "wall": time.time(),

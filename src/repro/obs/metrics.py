@@ -41,6 +41,8 @@ import threading
 from bisect import bisect_left
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.analysis.lock_watchdog import note_callback
+
 
 def _label_key(labels: dict) -> str:
     """Canonical label string: sorted ``k=v`` pairs, '' for no labels."""
@@ -57,7 +59,7 @@ class Counter:
     def __init__(self, name: str, labels: dict, lock: threading.Lock):
         self.name = name
         self.labels = labels
-        self._value = 0.0
+        self._value = 0.0               # guarded-by: _lock
         self._lock = lock
 
     def inc(self, n: float = 1.0):
@@ -78,7 +80,7 @@ class Gauge:
     def __init__(self, name: str, labels: dict, lock: threading.Lock):
         self.name = name
         self.labels = labels
-        self._value = 0.0
+        self._value = 0.0               # guarded-by: _lock
         self._lock = lock
 
     def set(self, v: float):
@@ -114,11 +116,11 @@ class Histogram:
         self.name = name
         self.labels = labels
         self.bounds = bounds                  # bucket upper edges
-        self._counts = [0] * (len(bounds) + 1)  # +1 overflow bucket
-        self._count = 0
-        self._sum = 0.0
-        self._min = math.inf
-        self._max = -math.inf
+        self._counts = [0] * (len(bounds) + 1)  # guarded-by: _lock
+        self._count = 0                         # guarded-by: _lock
+        self._sum = 0.0                         # guarded-by: _lock
+        self._min = math.inf                    # guarded-by: _lock
+        self._max = -math.inf                   # guarded-by: _lock
         self._lock = lock
 
     def observe(self, v: float):
@@ -132,7 +134,7 @@ class Histogram:
             if v > self._max:
                 self._max = v
 
-    def _bucket_mid(self, i: int) -> float:
+    def _bucket_mid(self, i: int) -> float:  # holds: _lock
         """Geometric midpoint of bucket i (clamped to observed range)."""
         if i == 0:
             lo, hi = 0.0, self.bounds[0]
@@ -145,7 +147,7 @@ class Histogram:
             mid = min(max(mid, self._min), self._max)
         return mid
 
-    def _percentile_locked(self, q: float) -> float:
+    def _percentile_locked(self, q: float) -> float:  # holds: _lock
         if self._count == 0:
             return 0.0
         target = q * (self._count - 1)
@@ -199,9 +201,11 @@ class MetricsRegistry:
 
     def __init__(self, n_stripes: int = 16):
         self._stripes = [threading.Lock() for _ in range(n_stripes)]
+        # stripe list itself is immutable after init; each element dict
+        # is guarded by the same-index stripe lock
         self._maps: List[Dict[tuple, object]] = [dict() for _ in
-                                                 range(n_stripes)]
-        self._providers: Dict[str, Callable[[], dict]] = {}
+                                                 range(n_stripes)]  # guarded-by: _stripes
+        self._providers: Dict[str, Callable[[], dict]] = {}  # guarded-by: _providers_lock
         self._providers_lock = threading.Lock()
 
     # -- get-or-create -------------------------------------------------
@@ -209,8 +213,8 @@ class MetricsRegistry:
         key = (cls.__name__, name, _label_key(labels))
         i = hash(key) % len(self._stripes)
         lock = self._stripes[i]
-        m = self._maps[i]
         with lock:
+            m = self._maps[i]
             obj = m.get(key)
             if obj is None:
                 obj = cls(name, labels, lock, **kw)
@@ -241,9 +245,9 @@ class MetricsRegistry:
     # -- export --------------------------------------------------------
     def _all_metrics(self) -> List[object]:
         out: List[object] = []
-        for lock, m in zip(self._stripes, self._maps):
+        for i, lock in enumerate(self._stripes):
             with lock:
-                out.extend(m.values())
+                out.extend(self._maps[i].values())
         return out
 
     def snapshot(self) -> dict:
@@ -269,6 +273,9 @@ class MetricsRegistry:
                 hists.setdefault(obj.name, {})[lk] = obj.summary()
         with self._providers_lock:
             providers = dict(self._providers)
+        # provider callables run OUTSIDE the providers lock: they are
+        # user code (VMM.stats, plane.stats) that takes subsystem locks
+        note_callback("metrics.provider")
         return {
             "counters": counters,
             "gauges": gauges,

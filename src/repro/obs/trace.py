@@ -144,11 +144,11 @@ class RequestTracer:
     def __init__(self, capacity: int = 1024, registry=None):
         self.capacity = capacity
         self.registry = registry
-        self._open: Dict[tuple, Span] = {}
-        self._ring: deque = deque(maxlen=capacity)
+        self._open: Dict[tuple, Span] = {}           # guarded-by: _lock
+        self._ring: deque = deque(maxlen=capacity)   # guarded-by: _lock
         self._lock = threading.Lock()
         # denial/deferral attribution: (tenant, cause) → count
-        self._denials: Dict[tuple, int] = {}
+        self._denials: Dict[tuple, int] = {}         # guarded-by: _lock
 
     # -- recording -----------------------------------------------------
     def start(self, tenant: str, rid: int, **detail) -> Span:

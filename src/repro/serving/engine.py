@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.lock_watchdog import note_callback
 from repro.core.mmu import MMUError
 from repro.obs import (NULL_HUB, PHASE_ADMITTED, PHASE_DECODE,
                        PHASE_DEFERRED, PHASE_PREFILL, PHASE_PREFILL_CHUNK,
@@ -143,10 +144,15 @@ class ServeEngine:
         # tenant pool uses to keep serving admission pressure-aware.
         self.admission_gate = admission_gate
         self.rng = np.random.default_rng(seed)
-        self._rid = 0
-        self.waiting: "collections.deque[Request]" = collections.deque()
-        self.completed: dict = {}
-        self._futures: dict = {}
+        # concurrency: submission surface (waiting/_futures/_rid/
+        # completed) is lock-guarded; the step path (slots, positions,
+        # cursors, kv) is single-owner — exactly one driver thread calls
+        # step()/run_round() at a time
+        self._rid = 0                                  # guarded-by: _lock
+        self.waiting: "collections.deque[Request]" = \
+            collections.deque()                        # guarded-by: _lock
+        self.completed: dict = {}                      # guarded-by: _lock
+        self._futures: dict = {}                       # guarded-by: _lock
         self._lock = threading.Lock()
         self.stats = EngineStats()
         # per-slot decode state: positions (-1 = dead) + MMU-leased pages
@@ -267,6 +273,8 @@ class ServeEngine:
             if self.rstate is not None:
                 n_pages += self.rstate.blocks_per_slot
             live = any(s is not None for s in self.slots)
+            if self.admission_gate is not None:
+                note_callback("engine.admission_gate")
             gated = (self.admission_gate is not None and live
                      and not self.admission_gate(owner, n_pages))
             if gated and self._swap and self._swap_out_victim():
@@ -547,11 +555,13 @@ class ServeEngine:
         parked slots can never deadlock the engine."""
         if not self._parked:
             return
-        if self.waiting and any(s is None for s in self.slots):
+        with self._lock:
+            waiting = bool(self.waiting)
+        if waiting and any(s is None for s in self.slots):
             return
         ms = self.kv.pool.memory_stats()
         free = ms["segments_total"] - ms["segments_in_use"]
-        idle = not self.waiting and all(
+        idle = not waiting and all(
             self.slots[j] is None or j in self._parked
             for j in range(self.B))
         for j in sorted(self._parked):
@@ -603,13 +613,16 @@ class ServeEngine:
         self.stats.pages_freed += self.kv.tables[i].n_pages
         self.kv.release(i)                        # pages back to the MMU
         self._release_state(i)
-        self.completed[r.rid] = r
+        with self._lock:
+            self.completed[r.rid] = r
+            fut = self._futures.get(r.rid)
         self.stats.completed += 1
         finished.append(r)
         if self.obs.enabled:
             self.obs.tracer.finish(self.obs_tenant, r.rid, "done",
                                    tokens=len(r.out_tokens))
-        fut = self._futures.get(r.rid)
+        # resolve OUTSIDE the lock: set_result runs done-callbacks (user
+        # code) on this thread
         if fut is not None and not fut.done():
             fut.set_result(r)
 

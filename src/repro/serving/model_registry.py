@@ -30,6 +30,7 @@ Two layers:
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -91,8 +92,13 @@ class ModelRegistry:
         self.transfer = transfer if transfer is not None \
             else TransferEngine(mode="vm_nocopy")
         self.verify_weights = verify_weights
-        self._models: Dict[str, ModelBitstream] = {}
-        self._clock = 0
+        self._models: Dict[str, ModelBitstream] = {}   # guarded-by: _lock
+        self._clock = 0                                # guarded-by: _lock
+        # one registry lock, not striped: swaps are rare and MUST
+        # serialize (two serving threads racing params() with
+        # max_resident=1 would otherwise interleave evict/swap-in and
+        # corrupt residency). Entry fields are guarded by it too.
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # Registration
@@ -103,7 +109,6 @@ class ModelRegistry:
         """Register a model family as a bitstream. Builds cfg/model/
         params when not given; fingerprints the weights; the new model
         is resident (evicting LRU idle models past ``max_resident``)."""
-        assert name not in self._models, f"model {name!r} already registered"
         arch = arch or name
         if cfg is None:
             from repro.configs import get_config
@@ -126,23 +131,29 @@ class ModelRegistry:
             params=params, resident=True,
             param_bytes=sum(np.asarray(leaf).nbytes
                             for leaf in jax.tree.leaves(params)))
-        self._models[name] = entry
-        self._touch(entry)
-        # CRC verified at load — the serving-path check Bitfile always
-        # promised but nothing called
-        self._verify(entry, where="register")
-        self._set_residency(entry)
-        self._evict_over_budget(keep={name})
+        with self._lock:
+            assert name not in self._models, \
+                f"model {name!r} already registered"
+            self._models[name] = entry
+            self._touch(entry)
+            # CRC verified at load — the serving-path check Bitfile
+            # always promised but nothing called
+            self._verify(entry, where="register")
+            self._set_residency(entry)
+            self._evict_over_budget(keep={name})
         return entry
 
     def __contains__(self, name: str) -> bool:
-        return name in self._models
+        with self._lock:
+            return name in self._models
 
     def __getitem__(self, name: str) -> ModelBitstream:
-        return self._models[name]
+        with self._lock:
+            return self._models[name]
 
     def names(self) -> List[str]:
-        return list(self._models)
+        with self._lock:
+            return list(self._models)
 
     # ------------------------------------------------------------------
     # Residency / the serving path
@@ -151,25 +162,30 @@ class ModelRegistry:
         """Device params for ``name`` — THE serving-path entry. Swaps
         the model in when needed (CRC-verified), evicting LRU idle
         models not in ``keep`` past the residency budget."""
-        entry = self._models[name]
-        self._touch(entry)
-        # enforce the residency budget on every serve, not just on a
-        # miss — shrinking max_resident (or a family going idle) must
-        # actually reconfigure idle weights away
-        self._evict_over_budget(keep=set(keep) | {name},
-                                incoming=0 if entry.resident else 1)
-        if not entry.resident:
-            self.swap_in(name)
-        return entry.params
+        with self._lock:
+            entry = self._models[name]
+            self._touch(entry)
+            # enforce the residency budget on every serve, not just on
+            # a miss — shrinking max_resident (or a family going idle)
+            # must actually reconfigure idle weights away
+            self._evict_over_budget(keep=set(keep) | {name},
+                                    incoming=0 if entry.resident else 1)
+            if not entry.resident:
+                self._swap_in_locked(entry)
+            return entry.params
 
-    def _touch(self, entry: ModelBitstream):
+    def _touch(self, entry: ModelBitstream):  # holds: _lock
         self._clock += 1
         entry.last_used = self._clock
 
     def swap_out(self, name: str) -> float:
         """Hot-swap a model's weights to the host tier (the paper's
         reconfigure-away). Returns seconds spent."""
-        entry = self._models[name]
+        with self._lock:
+            return self._swap_out_locked(self._models[name])
+
+    def _swap_out_locked(self, entry: ModelBitstream) -> float:  # holds: _lock
+        name = entry.name
         if not entry.resident:
             return 0.0
         t0 = time.perf_counter()
@@ -192,7 +208,11 @@ class ModelRegistry:
         """Reconfigure a swapped model back onto the device: CRC check
         first (metadata + weight bytes), then host→device. Returns
         seconds spent — the reconfiguration cost the paper meters."""
-        entry = self._models[name]
+        with self._lock:
+            return self._swap_in_locked(self._models[name])
+
+    def _swap_in_locked(self, entry: ModelBitstream) -> float:  # holds: _lock
+        name = entry.name
         if entry.resident:
             return 0.0
         t0 = time.perf_counter()
@@ -213,7 +233,8 @@ class ModelRegistry:
                                     "bytes": entry.param_bytes})
         return dt
 
-    def _evict_over_budget(self, keep=frozenset(), incoming: int = 0):
+    def _evict_over_budget(self, keep=frozenset(),
+                           incoming: int = 0):  # holds: _lock
         """Swap out LRU models (not in ``keep``) until resident count
         plus ``incoming`` fits ``max_resident``."""
         if self.max_resident is None:
@@ -223,13 +244,13 @@ class ModelRegistry:
                          key=lambda e: e.last_used)
         while len(resident) + incoming > self.max_resident and victims:
             v = victims.pop(0)
-            self.swap_out(v.name)
+            self._swap_out_locked(v)
             resident.remove(v)
 
     # ------------------------------------------------------------------
     # Verification
     # ------------------------------------------------------------------
-    def _verify(self, entry: ModelBitstream, where: str):
+    def _verify(self, entry: ModelBitstream, where: str):  # holds: _lock
         """The bitstream legality gate: Bitfile metadata CRC, then the
         weights fingerprint — a flipped byte in the host-tier copy makes
         the recomputed CRC diverge and the load is refused."""
@@ -259,7 +280,7 @@ class ModelRegistry:
                 f"model {entry.name!r} weights CRC mismatch at {where} "
                 f"— refusing to load a corrupted bitstream")
 
-    def _set_residency(self, entry: ModelBitstream):
+    def _set_residency(self, entry: ModelBitstream):  # holds: _lock
         if self.obs.enabled:
             self.obs.set_gauge("model_residency",
                                1.0 if entry.resident else 0.0,
@@ -269,16 +290,20 @@ class ModelRegistry:
     # Introspection
     # ------------------------------------------------------------------
     def residency(self) -> Dict[str, bool]:
-        return {n: e.resident for n, e in self._models.items()}
+        with self._lock:
+            return {n: e.resident for n, e in self._models.items()}
 
     def stats(self) -> dict:
-        return {
-            "models": {n: e.snapshot() for n, e in self._models.items()},
-            "resident": sum(e.resident for e in self._models.values()),
-            "max_resident": self.max_resident,
-            "crc_checks": self.loader.crc_checks,
-            "crc_failures": self.loader.crc_failures,
-        }
+        with self._lock:
+            return {
+                "models": {n: e.snapshot()
+                           for n, e in self._models.items()},
+                "resident": sum(e.resident
+                                for e in self._models.values()),
+                "max_resident": self.max_resident,
+                "crc_checks": self.loader.crc_checks,
+                "crc_failures": self.loader.crc_failures,
+            }
 
 
 @dataclass
@@ -294,6 +319,9 @@ class SlotGroup:
 
 
 class MuxEngine:
+    # concurrency: single-owner — one driver thread calls step()/
+    # run_round()/bind(); cross-thread safety lives in the registry
+    # lock, each engine's submission lock, and the shared pool lock
     """Per-model slot groups over one shared MMU pool.
 
     Decode steps batch per family (the arrays differ per arch);

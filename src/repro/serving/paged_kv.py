@@ -55,6 +55,8 @@ from repro.serving.swap import HostSwapTier
 
 
 class PagedKVCache:
+    # concurrency: single-owner — accessed only by its engine's step
+    # thread; all cross-thread state lives in the SegmentPool (locked)
     """Physical page pool + per-slot block tables, leased from an MMU."""
 
     def __init__(self, cfg, model, batch_size: int, capacity: int,

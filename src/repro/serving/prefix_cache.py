@@ -38,6 +38,8 @@ def _chain(prev: bytes, tokens: np.ndarray) -> bytes:
 
 
 class PrefixCache:
+    # concurrency: single-owner — driven by one engine step thread; the
+    # pin/unpin calls it makes go through the pool's own lock
     """LRU map of hash-chained prompt prefixes to pinned physical pages."""
 
     def __init__(self, pool, page_size: int,

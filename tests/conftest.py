@@ -17,6 +17,28 @@ def pytest_configure(config):
         "slow: long-running integration test (deselect with -m 'not slow')")
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _lock_watchdog_session():
+    """Opt-in runtime lock watchdog (REPRO_LOCK_WATCHDOG=1): every
+    src/repro lock created during the session is instrumented, and the
+    session errors at teardown on any lock-order cycle or user callback
+    invoked under a held lock. Off by default — the serving loop pays
+    one global-flag check per callback dispatch site."""
+    from repro.analysis import lock_watchdog as lw
+
+    if not lw.env_requested():
+        yield None
+        return
+    lw.WATCHDOG.reset()
+    lw.enable()
+    yield lw.WATCHDOG
+    lw.disable()
+    problems = lw.WATCHDOG.problems()
+    assert not problems, (
+        "lock watchdog recorded concurrency violations:\n  "
+        + "\n  ".join(problems))
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     import jax

@@ -1,0 +1,613 @@
+"""Concurrency legality suite self-tests.
+
+Every static rule gets a positive case (a seeded violation in a
+synthetic fixture module MUST be flagged) and a negative case (the
+disciplined version of the same code MUST pass) — so the analyzer
+itself can't silently rot into either always-green or always-red.
+The runtime half (`lock_watchdog`) is exercised with real threads and
+real lock acquisitions. Finally, the real tree is analyzed end-to-end:
+HEAD must be legality-clean, and the lock-order graph acyclic.
+
+Fixture modules are written under tmp_path and analyzed with the same
+``Project`` loader the CLI uses — stdlib ``ast``/``tokenize`` only.
+"""
+import textwrap
+import threading
+
+from repro.analysis import run_all
+from repro.analysis import guarded_by, lock_order, telemetry
+from repro.analysis.common import Project
+
+
+def _project(tmp_path, files):
+    """Write {relpath: source} under a fixture root -> Project."""
+    root = tmp_path / "fixtures"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return Project(str(root))
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ===========================================================================
+# guarded-by
+# ===========================================================================
+
+GUARDED_BAD = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._x = 0          # guarded-by: _lock
+
+        def bump(self):
+            self._x += 1         # WRONG: no lock held
+
+        def ok(self):
+            with self._lock:
+                return self._x
+"""
+
+
+def test_guarded_by_flags_unlocked_access(tmp_path):
+    project = _project(tmp_path, {"mod.py": GUARDED_BAD})
+    findings = guarded_by.run(project)
+    assert _rules(findings) == ["guarded-by"]
+    (f,) = findings
+    assert "Box.bump" in f.message and "_x" in f.message
+    # the disciplined accessor two lines down is NOT flagged
+    assert "Box.ok" not in f.message
+
+
+def test_guarded_by_clean_code_passes(tmp_path):
+    good = GUARDED_BAD.replace(
+        "self._x += 1         # WRONG: no lock held",
+        "with self._lock:\n                self._x += 1")
+    project = _project(tmp_path, {"mod.py": good})
+    assert guarded_by.run(project) == []
+
+
+def test_unguarded_ok_waiver_suppresses_finding(tmp_path):
+    waived = GUARDED_BAD.replace(
+        "# WRONG: no lock held",
+        "# unguarded-ok: single-writer counter, test-only")
+    project = _project(tmp_path, {"mod.py": waived})
+    assert guarded_by.run(project) == []
+
+
+def test_condition_alias_counts_as_lock(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition(self._lock)
+                self._q = []     # guarded-by: _lock
+
+            def put(self, x):
+                with self._cv:   # alias of _lock
+                    self._q.append(x)
+                    self._cv.notify()
+    """})
+    assert guarded_by.run(project) == []
+
+
+def test_nested_function_loses_lock_context(tmp_path):
+    """A closure runs later on an unknown thread: the enclosing
+    ``with self._lock`` must not legalize its accesses."""
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0      # guarded-by: _lock
+
+            def deferred(self):
+                with self._lock:
+                    def cb():
+                        return self._x
+                    return cb
+    """})
+    findings = guarded_by.run(project)
+    assert _rules(findings) == ["guarded-by"]
+
+
+# ===========================================================================
+# holds: annotation + lock-reacquire
+# ===========================================================================
+
+def test_holds_annotation_seeds_held_set(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0      # guarded-by: _lock
+
+            def _peek(self):  # holds: _lock
+                return self._x
+
+            def get(self):
+                with self._lock:
+                    return self._peek()
+    """})
+    assert guarded_by.run(project) == []
+
+
+def test_holds_reacquire_is_self_deadlock(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0      # guarded-by: _lock
+
+            def _peek(self):  # holds: _lock
+                with self._lock:       # WRONG: non-reentrant
+                    return self._x
+    """})
+    findings = guarded_by.run(project)
+    assert _rules(findings) == ["lock-reacquire"]
+    assert "self-deadlock" in findings[0].message
+
+
+def test_holds_annotation_on_multiline_signature(tmp_path):
+    """The annotation may sit on any line of a split def signature."""
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0      # guarded-by: _lock
+
+            def _account(self, a, b,
+                         c):  # holds: _lock
+                return self._x + a + b + c
+    """})
+    assert guarded_by.run(project) == []
+
+
+# ===========================================================================
+# model-decl (target modules must declare their concurrency model)
+# ===========================================================================
+
+UNDECLARED = """
+    import threading
+
+    class Plane:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._q = []
+
+        def put(self, x):
+            with self._lock:
+                self._q.append(x)
+"""
+
+
+def test_model_decl_required_in_target_modules(tmp_path):
+    project = _project(tmp_path, {"core/scheduler.py": UNDECLARED})
+    findings = guarded_by.run(project)
+    assert _rules(findings) == ["model-decl"]
+    assert "Plane" in findings[0].message
+
+
+def test_model_decl_not_required_elsewhere(tmp_path):
+    project = _project(tmp_path, {"util/helper.py": UNDECLARED})
+    assert guarded_by.run(project) == []
+
+
+def test_concurrency_note_satisfies_model_decl(tmp_path):
+    noted = UNDECLARED.replace(
+        "class Plane:",
+        "class Plane:  # concurrency: single-owner, lock is belt+braces")
+    project = _project(tmp_path, {"core/scheduler.py": noted})
+    assert guarded_by.run(project) == []
+
+
+# ===========================================================================
+# lock-order graph
+# ===========================================================================
+
+def test_lock_order_cycle_detected(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class AB:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def fwd(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def rev(self):
+                with self._b:
+                    with self._a:       # WRONG: inverts fwd's order
+                        pass
+    """})
+    findings, graph = lock_order.run(project)
+    assert "lock-order-cycle" in _rules(findings)
+    assert ("AB._a", "AB._b") in graph.edges
+    assert ("AB._b", "AB._a") in graph.edges
+
+
+def test_lock_order_consistent_nesting_is_clean(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class AB:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def fwd(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def fwd2(self):
+                with self._a:
+                    with self._b:
+                        pass
+    """})
+    findings, graph = lock_order.run(project)
+    assert findings == []
+    assert list(graph.edges) == [("AB._a", "AB._b")]
+
+
+def test_interprocedural_cycle_across_classes(tmp_path):
+    """A -> B through a method call, B -> A directly: the cycle only
+    exists interprocedurally."""
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Inner:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def poke(self, outer):
+                with self._lock:
+                    outer.touch()
+
+        class Outer:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.inner = Inner()
+
+            def touch(self):
+                with self._lock:
+                    pass
+
+            def drive(self):
+                with self._lock:
+                    self.inner.poke(self)
+    """})
+    findings, _graph = lock_order.run(project)
+    assert "lock-order-cycle" in _rules(findings)
+
+
+def test_callback_under_lock_direct(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Plane:
+            def __init__(self, relief_cb):
+                self._lock = threading.Lock()
+                self.relief_cb = relief_cb
+
+            def relieve(self):
+                with self._lock:
+                    self.relief_cb(1)   # WRONG: user code under lock
+    """})
+    findings, _graph = lock_order.run(project)
+    assert _rules(findings) == ["callback-under-lock"]
+    assert "relief_cb" in findings[0].message
+
+
+def test_callback_under_lock_transitive(tmp_path):
+    """Holding a lock across a method that MAY reach a callback is the
+    same hazard one hop removed."""
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Plane:
+            def __init__(self, relief_cb):
+                self._lock = threading.Lock()
+                self.relief_cb = relief_cb
+
+            def _fire(self):
+                self.relief_cb(1)
+
+            def relieve(self):
+                with self._lock:
+                    self._fire()        # WRONG: reaches relief_cb
+    """})
+    findings, _graph = lock_order.run(project)
+    assert _rules(findings) == ["callback-under-lock"]
+
+
+def test_callback_outside_lock_is_clean(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class Plane:
+            def __init__(self, relief_cb):
+                self._lock = threading.Lock()
+                self.relief_cb = relief_cb
+                self.fired = 0           # guarded-by: _lock
+
+            def relieve(self):
+                with self._lock:
+                    self.fired += 1
+                self.relief_cb(1)        # hoisted out: legal
+    """})
+    findings, _graph = lock_order.run(project)
+    assert findings == []
+
+
+def test_callback_table_taint(tmp_path):
+    """Values read from a handler table are callbacks even when called
+    through a local."""
+    project = _project(tmp_path, {"mod.py": """
+        import threading
+
+        class CQ:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.handlers = {}
+
+            def deliver(self, ev):
+                with self._lock:
+                    h = self.handlers[ev.source]
+                    h(ev)               # WRONG: tainted call under lock
+    """})
+    findings, _graph = lock_order.run(project)
+    assert _rules(findings) == ["callback-under-lock"]
+
+
+# ===========================================================================
+# telemetry legality
+# ===========================================================================
+
+def test_metric_type_conflict(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        def f(obs):
+            obs.count("x_total", 1, tenant="a")
+
+        def g(obs):
+            obs.observe("x_total", 0.5, tenant="a")   # WRONG: forks type
+    """})
+    findings, _summary = telemetry.run(project)
+    assert _rules(findings) == ["metric-type"]
+    assert "x_total" in findings[0].message
+
+
+def test_metric_label_conflict(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        def f(obs):
+            obs.count("y_total", 1, tenant="a")
+
+        def g(obs):
+            obs.count("y_total", 1, tenant="a", op="r")  # WRONG: forks
+    """})
+    findings, _summary = telemetry.run(project)
+    assert _rules(findings) == ["metric-labels"]
+
+
+def test_metric_consistent_sites_are_clean(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        def f(obs):
+            obs.count("z_total", 1, tenant="a")
+
+        def g(obs):
+            obs.count("z_total", 2, tenant="b")
+    """})
+    findings, summary = telemetry.run(project)
+    assert findings == []
+    assert summary["z_total"]["sites"] == 2
+
+
+def test_golden_producer_missing(tmp_path):
+    schema = tmp_path / "schema_test.py"
+    schema.write_text(textwrap.dedent("""
+        FOO_KEYS = {"present_key", "missing_key"}
+    """))
+    project = _project(tmp_path, {"mod.py": """
+        def stats():
+            return {"present_key": 1}
+    """})
+    findings, _summary = telemetry.run(project, str(schema))
+    assert _rules(findings) == ["golden-producer"]
+    assert "missing_key" in findings[0].message
+    assert "present_key" not in findings[0].message
+
+
+def test_golden_producer_satisfied(tmp_path):
+    schema = tmp_path / "schema_test.py"
+    schema.write_text(textwrap.dedent("""
+        FOO_KEYS = {"present_key", "stored_key", "field_key"}
+    """))
+    project = _project(tmp_path, {"mod.py": """
+        from dataclasses import dataclass
+
+        @dataclass
+        class S:
+            field_key: int = 0
+
+        def stats(out):
+            out["stored_key"] = 2
+            return {"present_key": 1}
+    """})
+    findings, _summary = telemetry.run(project, str(schema))
+    assert findings == []
+
+
+# ===========================================================================
+# runtime lock watchdog
+# ===========================================================================
+
+def test_watchdog_records_edges_and_cycles():
+    from repro.analysis import lock_watchdog as lw
+
+    lw.WATCHDOG.reset()
+    try:
+        a = lw._WatchedLock("T.a")
+        b = lw._WatchedLock("T.b")
+        with a:
+            with b:
+                pass
+        assert ("T.a", "T.b") in lw.WATCHDOG.edges
+        assert lw.WATCHDOG.cycles() == []
+        with b:
+            with a:
+                pass
+        cycles = lw.WATCHDOG.cycles()
+        assert cycles and set(cycles[0]) == {"T.a", "T.b"}
+        assert any("cycle" in p for p in lw.WATCHDOG.problems())
+    finally:
+        lw.WATCHDOG.reset()
+
+
+def test_watchdog_cross_thread_edges_merge():
+    """Edges key on creation site, so two threads disagreeing on order
+    still form one cycle in the global graph."""
+    from repro.analysis import lock_watchdog as lw
+
+    lw.WATCHDOG.reset()
+    try:
+        a = lw._WatchedLock("T.a")
+        b = lw._WatchedLock("T.b")
+
+        def fwd():
+            with a:
+                with b:
+                    pass
+
+        def rev():
+            with b:
+                with a:
+                    pass
+
+        t1 = threading.Thread(target=fwd)
+        t1.start()
+        t1.join()
+        t2 = threading.Thread(target=rev)
+        t2.start()
+        t2.join()
+        assert lw.WATCHDOG.cycles()
+    finally:
+        lw.WATCHDOG.reset()
+
+
+def test_watchdog_callback_under_lock_flagged():
+    from repro.analysis import lock_watchdog as lw
+
+    with lw.watching() as w:
+        lk = lw._WatchedLock("T.lock")
+        with lk:
+            lw.note_callback("test.cb")
+        assert w.violations and w.violations[0]["held"] == ["T.lock"]
+        n = len(w.violations)
+        lw.note_callback("test.cb")      # nothing held: legal
+        assert len(w.violations) == n
+    lw.WATCHDOG.reset()
+
+
+def test_watchdog_disabled_is_noop():
+    """Off, note_callback is one flag check and records nothing (the
+    watchdog is scoped off even under a REPRO_LOCK_WATCHDOG=1 run)."""
+    from repro.analysis import lock_watchdog as lw
+
+    was = lw.enabled()
+    lw.disable()
+    try:
+        assert not lw.enabled()
+        before = len(lw.WATCHDOG.violations)
+        lw.note_callback("test.cb")      # off: single flag check
+        assert len(lw.WATCHDOG.violations) == before
+    finally:
+        if was:
+            lw.enable()
+
+
+def test_watchdog_factory_names_product_locks():
+    """Inside a watching scope, locks created from src/repro code are
+    wrapped and named by creation site; test-file locks stay raw."""
+    from repro.analysis import lock_watchdog as lw
+    from repro.core.shell import CompletionQueue
+
+    with lw.watching():
+        cq = CompletionQueue()
+        assert isinstance(cq._lock, lw._WatchedLock)
+        assert cq._lock._site == "CompletionQueue._lock"
+        here = threading.Lock()          # created from tests/: raw
+        assert not isinstance(here, lw._WatchedLock)
+    # scope closed: product locks are raw again — unless the session
+    # itself runs watched (REPRO_LOCK_WATCHDOG=1), which watching()
+    # deliberately leaves enabled
+    if not lw.env_requested():
+        assert not isinstance(CompletionQueue()._lock, lw._WatchedLock)
+    lw.WATCHDOG.reset()
+
+
+def test_watchdog_condition_protocol():
+    """Condition(wrapped_lock) wait/notify keeps the held-stack
+    coherent — no phantom edges from wait()'s release/reacquire."""
+    from repro.analysis import lock_watchdog as lw
+
+    lw.WATCHDOG.reset()
+    try:
+        lk = lw._WatchedLock("T.lock")
+        cv = threading.Condition(lk)
+        hits = []
+
+        def waiter():
+            with cv:
+                while not hits:
+                    cv.wait(timeout=2.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        with cv:
+            hits.append(1)
+            cv.notify()
+        t.join(timeout=5)
+        assert not t.is_alive()
+        assert lw.WATCHDOG.cycles() == []
+        assert lw.WATCHDOG.violations == []
+    finally:
+        lw.WATCHDOG.reset()
+
+
+# ===========================================================================
+# the real tree
+# ===========================================================================
+
+def test_head_is_legality_clean():
+    """The shipping gate, as a test: zero findings over src/repro, and
+    the lock-order graph is a DAG."""
+    findings, report = run_all()
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert report["counts"] == {}
+    # every target module's lock-bearing classes declared a model
+    assert "DataPlane" in report["declared_models"]
+    assert "SegmentPool" in report["declared_models"]
+    assert "ModelRegistry" in report["declared_models"]
+    # the acyclic order the codebase documents: plane -> pool, and
+    # obs leaf locks nest inside subsystem locks
+    edges = {tuple(e.split(" -> ")) for e in report["lock_order_edges"]}
+    assert ("DataPlane._lock", "SegmentPool._lock") in edges
+    assert all(a != b for a, b in edges)

@@ -1,0 +1,246 @@
+"""Regression tests for the defects the concurrency legality checker
+found (see ANALYSIS.json / tests/README.md "Concurrency legality").
+
+The two defect families the static passes flagged and this PR fixed:
+
+* **futures resolved under a lock** — ``_QueuedPlane.submit`` (unknown
+  tenant) and ``ServeEngine._finish`` used to call
+  ``set_exception``/``set_result`` inside the submission lock, running
+  arbitrary done-callbacks (user code) with the lock held: a callback
+  that re-enters the plane/engine self-deadlocks on the non-reentrant
+  lock. The probes below attach a done-callback that tries to take the
+  very lock with a bounded timeout — pre-fix it times out, post-fix it
+  acquires immediately — so a regression fails fast instead of hanging
+  the suite.
+
+* **guarded state read/written without the lock** — registry residency
+  (``ModelRegistry`` was entirely unlocked), pool quota updates, and
+  engine waiting-queue reads. Exercised here with real thread races and
+  invariant checks at quiescence.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.mmu import MMUError, SegmentPool
+from repro.core.scheduler import make_data_plane
+from repro.core.shell import CompletionQueue
+from repro.core.tenant import Tenant
+from repro.models import build_model
+from repro.serving import ModelRegistry, ServeEngine
+
+CFG = get_config("qwen1.5-0.5b", reduced=True)
+
+
+def _tenant(name):
+    return Tenant(name=name, vslice=None, pool=None, cq=CompletionQueue())
+
+
+# ===========================================================================
+# Futures must resolve OUTSIDE the lock
+# ===========================================================================
+
+@pytest.mark.parametrize("policy", ["fev", "wfq", "slo"])
+def test_unregistered_submit_resolves_future_outside_lock(policy):
+    """submit() to an unknown tenant rejects the job via
+    ``set_exception`` — its done-callbacks must be able to re-enter the
+    plane (take its lock) without deadlocking."""
+    plane = make_data_plane(policy)
+    try:
+        ghost = _tenant("ghost")
+        probe = {}
+        orig = plane._make_job
+
+        def probing(tenant, op, work, detail):
+            job = orig(tenant, op, work, detail)
+
+            def cb(_fut):
+                # pre-fix the cv/lock is held here -> times out
+                got = plane._lock.acquire(timeout=1.0)
+                if got:
+                    plane._lock.release()
+                probe["lock_free"] = got
+
+            job.future.add_done_callback(cb)
+            return job
+
+        plane._make_job = probing
+        fut = plane.submit(ghost, "run", lambda: 1)
+        with pytest.raises(KeyError):
+            fut.result(timeout=2)
+        assert probe["lock_free"], \
+            "done-callback ran with the plane lock held"
+    finally:
+        plane.shutdown()
+
+
+def test_engine_finish_resolves_future_outside_lock(rng_key):
+    """A request's completion future must resolve with the engine
+    submission lock free — done-callbacks are user code and may call
+    back into the engine (has_work/submit/stats)."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = ServeEngine(CFG, model, 2, 64, page_size=8)
+    rid = eng.submit(np.arange(8) % CFG.vocab, max_new_tokens=3)
+    probe = {}
+
+    def cb(_fut):
+        got = eng._lock.acquire(timeout=1.0)
+        if got:
+            eng._lock.release()
+        probe["lock_free"] = got
+        probe["reentry"] = eng.has_work()   # re-entry must not deadlock
+
+    eng.future(rid).add_done_callback(cb)
+    done = eng.run_round(params)
+    assert {r.rid for r in done} == {rid}
+    assert probe["lock_free"], \
+        "done-callback ran with the engine lock held"
+    assert probe["reentry"] is False
+
+
+# ===========================================================================
+# Guarded state under real races
+# ===========================================================================
+
+def test_registry_concurrent_params_respects_budget():
+    """Two threads hammering ``params()`` under ``max_resident=1``:
+    pre-fix (no registry lock) evict/swap-in interleave and corrupt
+    residency; post-fix every call returns usable params and the budget
+    holds at quiescence with zero CRC failures."""
+    reg = ModelRegistry(max_resident=1)
+    reg.register("fam-a", arch="qwen1.5-0.5b", seed=0)
+    reg.register("fam-b", arch="qwen1.5-0.5b", seed=1)
+    errors = []
+
+    def serve(name, n):
+        try:
+            for _ in range(n):
+                params = reg.params(name)
+                assert params is not None
+        except Exception as exc:     # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=serve, args=(nm, 12))
+               for nm in ("fam-a", "fam-b") for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    st = reg.stats()
+    assert st["crc_failures"] == 0
+    assert st["resident"] <= 1
+    # swap churn actually happened (the race window was exercised)
+    swaps = sum(m["swap_ins"] for m in st["models"].values())
+    assert swaps >= 2
+
+
+def test_pool_quota_updates_race_alloc():
+    """set_quota/clear_quota flip owner budgets while another thread
+    leases and frees pages: no torn reads, and the pool's refcount /
+    overlap invariants hold at quiescence."""
+    pool = SegmentPool(total_bytes=64 * 256, backend="bitmap",
+                       segment_bytes=256)
+    stop = threading.Event()
+    errors = []
+
+    def quota_churn():
+        try:
+            i = 0
+            while not stop.is_set():
+                pool.set_quota_segs("w", 4 + (i % 8))
+                if i % 5 == 0:
+                    pool.clear_quota("w")
+                i += 1
+        except Exception as exc:     # noqa: BLE001
+            errors.append(exc)
+
+    def alloc_churn():
+        try:
+            for j in range(300):
+                try:
+                    pt = pool.alloc_pages(1 + j % 3, owner="w")
+                except MMUError:
+                    continue         # quota denial: expected, clean
+                if j % 2 == 0:
+                    pool.grow_pages(pt.handle, owner="w")
+                pool.free_pages(pt.handle, owner="w")
+        except Exception as exc:     # noqa: BLE001
+            errors.append(exc)
+
+    q = threading.Thread(target=quota_churn)
+    a = threading.Thread(target=alloc_churn)
+    q.start()
+    a.start()
+    a.join(timeout=60)
+    stop.set()
+    q.join(timeout=10)
+    assert not errors, errors
+    assert pool.refcounts_consistent()
+    assert pool.overlaps_ok()
+    assert pool.pages_in_use() == 0
+
+
+def test_engine_concurrent_submit_while_stepping(rng_key):
+    """Submitters race the step thread's waiting-queue reads
+    (``_try_resume`` used to read ``self.waiting`` unlocked): every
+    request must complete exactly once, rids strictly FIFO-unique."""
+    model = build_model(CFG)
+    params = model.init(rng_key)
+    eng = ServeEngine(CFG, model, 2, 64, page_size=8, chunk_tokens=8,
+                      swap=True)
+    rids = []
+    rid_lock = threading.Lock()
+
+    def submitter(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(4):
+            prompt = rng.integers(0, CFG.vocab, size=(6,))
+            r = eng.submit(prompt.astype(np.int32), max_new_tokens=2)
+            with rid_lock:
+                rids.append(r)
+
+    threads = [threading.Thread(target=submitter, args=(s,))
+               for s in range(3)]
+    for t in threads:
+        t.start()
+    done = []
+    for _ in range(400):
+        done += eng.run_round(params)
+        if not any(t.is_alive() for t in threads) and not eng.has_work():
+            break
+    for t in threads:
+        t.join(timeout=30)
+    done += eng.run_round(params)
+    assert len(rids) == len(set(rids)) == 12
+    assert sorted(r.rid for r in done) == sorted(rids)
+
+
+def test_plane_workload_clean_under_watchdog():
+    """End-to-end runtime check of the hoisting discipline: a queued
+    plane serving racing tenants (plus an unregistered reject and a
+    straggler IRQ) records zero cycles and zero callbacks-under-lock."""
+    from repro.analysis import lock_watchdog as lw
+
+    with lw.watching() as w:
+        plane = make_data_plane("slo")
+        try:
+            a, b = _tenant("a"), _tenant("b")
+            plane.register(a, weight=2.0)
+            plane.register(b, weight=1.0)
+            a.cq.set_irq(0, lambda ev: None)
+            futs = [plane.submit(t, "run", lambda: 1)
+                    for t in (a, b) for _ in range(8)]
+            for f in futs:
+                assert f.result(timeout=10) == 1
+            with pytest.raises(KeyError):
+                plane.submit(_tenant("ghost"), "run", lambda: 1) \
+                    .result(timeout=5)
+        finally:
+            plane.shutdown()
+        assert w.cycles() == []
+        assert w.violations == [], w.problems()
+    lw.WATCHDOG.reset()

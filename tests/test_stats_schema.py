@@ -73,6 +73,42 @@ OBS_METRICS_KEYS = {"counters", "gauges", "histograms", "providers"}
 HISTOGRAM_SUMMARY_KEYS = {"count", "sum", "mean", "min", "max",
                           "p50", "p95", "p99"}
 
+# Every obs metric NAME instrumented in src/repro (deliberately not a
+# ``*_KEYS`` set: these are emitted series names, not dict keys — the
+# analyzer's golden-producer rule scans ``*_KEYS``/``*_FIELDS`` only).
+# Dashboards and the Prometheus scrape key on these strings; a rename
+# is a silent break. New names are fine, removals/renames are not —
+# the legality checker's telemetry pass is the census taker here.
+METRIC_NAMES = {
+    "autoscaler_actions_total",
+    "dma_d2h_bytes_total", "dma_d2h_s", "dma_h2d_bytes_total",
+    "dma_h2d_s",
+    "engine_step_s",
+    "kv_cow_forks_total", "kv_refault_s", "kv_refaults_total",
+    "kv_shared_pages_total", "kv_swap_bytes_total", "kv_swap_out_s",
+    "kv_swapped_pages_total",
+    "mmu_alloc_s", "mmu_allocs_total", "mmu_cow_forks_total",
+    "mmu_denials_total", "mmu_page_faults_total",
+    "mmu_pages_allocated_total", "mmu_pages_freed_total",
+    "mmu_shared_maps_total", "mmu_swap_ins_total", "mmu_swap_outs_total",
+    "mmu_translate_s",
+    "model_crc_checks_total", "model_crc_failures_total",
+    "model_residency", "model_swap_in_s", "model_swap_out_s",
+    "model_swaps_total",
+    "plane_admission_denied_total", "plane_buildup_irqs_total",
+    "plane_ops_total", "plane_pressure_relieved_total",
+    "plane_service_s", "plane_stragglers_total", "plane_wait_s",
+    "serve_denials_total", "serve_prefill_chunk_tokens",
+    "state_pages_leased_total", "state_refault_s",
+    "state_refaults_total", "state_swap_out_s",
+    "state_swapped_pages_total",
+    "vmm_admissions_total", "vmm_evictions_total",
+    "vmm_slice_failures_total",
+}
+
+ANALYSIS_REPORT_SECTIONS = {"findings", "counts", "declared_models",
+                            "lock_order_edges", "metrics"}
+
 
 def _assert_keys(got: dict, want: set, what: str):
     missing = want - set(got)
@@ -167,3 +203,22 @@ def test_obs_snapshot_schema():
     _assert_keys(roll, {"finished", "tokens", "decode_steps",
                         "queue_wait_s", "ttft_s", "tokens_per_s"},
                  "tracer tenant rollup")
+
+
+def test_metric_name_census():
+    """Metric-name drift sweep, pinned: the analyzer's telemetry pass
+    enumerates every instrumented series name in src/repro; each golden
+    name must still exist (with a consistent type + label-set — the
+    pass itself fails on forks). New names are allowed."""
+    from repro.analysis import run_all
+
+    findings, report = run_all()
+    telemetry_findings = [f for f in findings
+                          if f.rule.startswith("metric")]
+    assert not telemetry_findings, telemetry_findings
+    used = set(report["metrics"])
+    missing = METRIC_NAMES - used
+    assert not missing, \
+        f"instrumented metric names disappeared (rename?): {sorted(missing)}"
+    _assert_keys(report, ANALYSIS_REPORT_SECTIONS,
+                 "repro.analysis report (ANALYSIS.json)")
